@@ -1,0 +1,103 @@
+"""Shared measurement harness for the paper-table benchmarks.
+
+A workload variant is a list of jitted stages (separate HloModules = separate
+kernel launches).  For each stage we compile, parse, and run LEO; the
+variant's model time is the sum of stage estimated times — so inter-kernel
+HBM traffic (stage outputs re-read by the next stage) is naturally priced,
+and kernel fusion shows up as real speedup.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core import (
+    HARDWARE_MODELS,
+    HardwareModel,
+    LeoAnalysis,
+    analyze_module,
+    parse_hlo,
+)
+from repro.core.report import Recommendation, recommendations
+
+
+@dataclass
+class VariantResult:
+    seconds: float
+    analyses: List[LeoAnalysis]
+    recs: List[Recommendation]
+    root_cause: str
+    wall_us: float = 0.0
+
+
+def _root_cause_label(an: LeoAnalysis) -> str:
+    top = an.top_root_causes(1)
+    if top:
+        q, _ = top[0]
+        instr = an.module.find(q)
+        if instr is not None:
+            scope = instr.op_name.rsplit("/", 2)[-1] if instr.op_name else ""
+            return f"{instr.opcode}" + (f" @{scope}" if scope else "")
+    diagnosed = list(an.blame.self_blame) + \
+        list(getattr(an.blame, "occupancy_blame", []))
+    if diagnosed:
+        s = max(diagnosed, key=lambda s: s.cycles)
+        return f"self:{s.subcategory}"
+    return "none"
+
+
+_HLO_CACHE: Dict[Tuple[int, int], str] = {}
+
+
+def analyze_variant(stages, hw: HardwareModel,
+                    time_wall: bool = False) -> VariantResult:
+    analyses: List[LeoAnalysis] = []
+    total = 0.0
+    wall_us = 0.0
+    inter_bytes = 0.0
+    for fn, args in stages:
+        key = (id(fn), id(args))
+        if key not in _HLO_CACHE:
+            _HLO_CACHE[key] = jax.jit(fn).lower(*args).compile().as_text()
+        module = parse_hlo(_HLO_CACHE[key])
+        an = analyze_module(module, hw)
+        analyses.append(an)
+        total += an.estimated_step_seconds
+        root = module.entry_computation.root
+        if root is not None:
+            inter_bytes += root.shape.byte_size
+        if time_wall:
+            out = fn(*args)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            wall_us += (time.perf_counter() - t0) / 3 * 1e6
+
+    # combined recommendations (primary = the dominant stage's)
+    dominant = max(analyses, key=lambda a: a.estimated_step_seconds)
+    recs = recommendations(dominant)
+    if len(stages) > 1:
+        # inter-kernel traffic diagnosis: stage boundaries force the full
+        # intermediate field through HBM each launch
+        recs.insert(0, Recommendation(
+            action="fuse_kernels", target="<pipeline>", scope="",
+            reason=f"{len(stages)} kernel launches round-trip "
+                   f"{inter_bytes/2**20:.1f} MiB of intermediates through "
+                   "HBM; fuse into one kernel.",
+            est_cycles=inter_bytes / hw.hbm_bw * hw.clock_hz))
+    return VariantResult(seconds=total, analyses=analyses, recs=recs,
+                         root_cause=_root_cause_label(dominant),
+                         wall_us=wall_us)
+
+
+def geomean(values: List[float]) -> float:
+    import math
+    vals = [v for v in values if v > 0]
+    if not vals:
+        return 0.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))

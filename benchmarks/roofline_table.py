@@ -1,0 +1,81 @@
+"""The 40-cell roofline baseline table (+ multi-pod) from dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by `repro.launch.dryrun`); emits
+per-cell roofline terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import io
+import json
+import os
+from typing import List
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh: str = "single") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*__{mesh}.json"))):
+        r = json.load(open(path))
+        arch, shape, _ = r["label"].split("__")
+        if r.get("status") == "skipped":
+            rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": "skipped", "dominant": "-",
+                         "compute_ms": "", "memory_ms": "",
+                         "collective_ms": "", "useful_ratio": "",
+                         "roofline_fraction": "", "note": r["reason"][:60]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": "error", "dominant": "-",
+                         "compute_ms": "", "memory_ms": "",
+                         "collective_ms": "", "useful_ratio": "",
+                         "roofline_fraction": "",
+                         "note": r.get("error", "")[:60]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": mesh, "status": "ok",
+            "dominant": rl["dominant"],
+            "compute_ms": rl["compute_s"] * 1e3,
+            "memory_ms": rl["memory_s"] * 1e3,
+            "collective_ms": rl["collective_s"] * 1e3,
+            "useful_ratio": rl["useful_ratio"],
+            "roofline_fraction": rl["roofline_fraction"],
+            "note": "",
+        })
+    return rows
+
+
+def render_csv(rows) -> str:
+    if not rows:
+        return "no dry-run artifacts found; run repro.launch.dryrun first\n"
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: (f"{v:.3f}" if isinstance(v, float) else v)
+                    for k, v in r.items()})
+    return buf.getvalue()
+
+
+def main():
+    all_rows = []
+    for mesh in ("single", "multi"):
+        rows = load_cells(mesh)
+        all_rows.extend(rows)
+        if rows:
+            ok = [r for r in rows if r["status"] == "ok"]
+            print(f"# {mesh}-pod: {len(ok)} compiled, "
+                  f"{sum(1 for r in rows if r['status'] == 'skipped')} "
+                  f"skipped, "
+                  f"{sum(1 for r in rows if r['status'] == 'error')} errors")
+    print(render_csv(all_rows))
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

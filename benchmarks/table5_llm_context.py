@@ -1,0 +1,140 @@
+"""Table V analogue: diagnostic-context comparison (C vs C+S vs C+L(S)).
+
+No network access exists here, so the "LLM" is a deterministic rule-based
+optimizer — a *strategist* that must pick one transformation per workload
+from the same action catalog LEO's recommendations use.  What varies is the
+context each strategist sees, exactly mirroring §IV-B:
+
+  C      — source code only: the strategist can only apply its generic
+           default (optimize the math), like an LLM pattern-matching code;
+  C+S    — code + raw top-stall site: picks the action suggested by the
+           *symptom's* opcode at the stalled location — right when symptom
+           and cause coincide, wrong when the cause is elsewhere
+           (inter-kernel traffic, loop-carried serialization);
+  C+L(S) — code + LEO's ranked recommendations: takes the top action.
+
+A pick "succeeds" when it lands in the workload's accepted-fix set; the
+achieved speedup is the Table-IV optimized variant's when it succeeds, 1.0x
+otherwise.  This isolates exactly the paper's claim: causal chains beat raw
+stall counts as optimization guidance.
+"""
+from __future__ import annotations
+
+import csv
+import io
+from typing import Dict, List
+
+from repro.core import HARDWARE_MODELS, OpClass
+
+from .harness import analyze_variant, geomean
+from .workloads import build_suite
+
+
+def _strategist_c(workload) -> str:
+    return "increase_matmul_intensity"  # generic "make the math faster"
+
+
+def _strategist_cs(workload, base_result) -> str:
+    """Symptom-local pick from the top-stalled/top-occupancy site."""
+    dominant = max(base_result.analyses,
+                   key=lambda a: a.estimated_step_seconds)
+    top = dominant.profile.top_stalled(1)
+    qualified = None
+    if top:
+        qualified = top[0].qualified
+    else:
+        recs = sorted(dominant.profile.records.values(),
+                      key=lambda r: -r.total_samples)
+        for r in recs:
+            instr = dominant.module.find(r.qualified)
+            if instr is not None and instr.op_class not in (
+                    OpClass.CONTROL, OpClass.PARAMETER, OpClass.TUPLE,
+                    OpClass.CONSTANT):
+                qualified = r.qualified
+                break
+    if qualified is None:
+        return "increase_matmul_intensity"
+    module = dominant.module
+    instr = module.find(qualified)
+    cls = instr.op_class
+    opcodes = {instr.opcode}
+    for cname in instr.called_computations:   # peek inside the hot fusion
+        callee = module.computations.get(cname)
+        if callee is not None:
+            opcodes |= {i.opcode for i in callee.instructions}
+    if cls is OpClass.MATMUL or "dot" in opcodes:
+        return "increase_matmul_intensity"
+    if opcodes & {"gather", "scatter", "dynamic-slice"}:
+        return "coalesce_or_tile_gather"
+    if cls in (OpClass.MEMORY_LOAD, OpClass.MEMORY_STORE):
+        return "prefetch_or_double_buffer"
+    if cls is OpClass.COLLECTIVE:
+        return "overlap_or_reshard_collective"
+    hw = dominant.hw
+    if hw.memory_seconds(instr) > hw.compute_seconds(instr):
+        # symptom says "loads are slow HERE" — without the causal chain the
+        # local prescription is a prefetch, even when the real fix is
+        # fusing kernels or restructuring a loop
+        return "prefetch_or_double_buffer"
+    return "already_compute_bound"
+
+
+def _strategist_cls(workload, base_result) -> str:
+    return base_result.recs[0].action if base_result.recs else "none"
+
+
+def run(hw_name: str = "tpu_v5e") -> Dict[str, dict]:
+    hw = HARDWARE_MODELS[hw_name]
+    suite = build_suite()
+    per_level: Dict[str, dict] = {}
+    rows = []
+    for level in ("C", "C+S", "C+L(S)"):
+        hits = 0
+        speedups: List[float] = []
+        for w in suite:
+            base = analyze_variant(w.baseline, hw)
+            opt = analyze_variant(w.optimized, hw)
+            true_speedup = base.seconds / max(opt.seconds, 1e-12)
+            if level == "C":
+                action = _strategist_c(w)
+            elif level == "C+S":
+                action = _strategist_cs(w, base)
+            else:
+                action = _strategist_cls(w, base)
+            accepted = w.accept_actions or (w.fix_action,)
+            hit = action in accepted
+            hits += hit
+            speedups.append(true_speedup if hit else 1.0)
+            rows.append({"level": level, "workload": w.name,
+                         "action": action, "hit": hit,
+                         "achieved": speedups[-1]})
+        per_level[level] = {
+            "action_match_rate": hits / len(suite),
+            "geomean_speedup": geomean(speedups),
+        }
+    return {"summary": per_level, "rows": rows}
+
+
+def render_csv(result) -> str:
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(["level", "action_match_rate", "geomean_speedup"])
+    for level, stats in result["summary"].items():
+        w.writerow([level, f"{stats['action_match_rate']:.2f}",
+                    f"{stats['geomean_speedup']:.3f}"])
+    w.writerow([])
+    w.writerow(["level", "workload", "action", "hit", "achieved"])
+    for r in result["rows"]:
+        w.writerow([r["level"], r["workload"], r["action"],
+                    int(r["hit"]), f"{r['achieved']:.2f}"])
+    return buf.getvalue()
+
+
+def main():
+    result = run()
+    print(render_csv(result))
+    return result
+
+
+if __name__ == "__main__":
+    main()

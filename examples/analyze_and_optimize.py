@@ -1,0 +1,59 @@
+"""LEO-guided optimization loop (paper §V-B protocol, HipKittens §VI-D).
+
+1. Compile a baseline kernel; 2. LEO diagnoses the root cause; 3. apply the
+fix the diagnosis implicates; 4. re-measure.  Two demonstrations:
+
+  * an XLA-level kernel (the LTIMES strided contraction), and
+  * a Pallas kernel pair (rmsnorm baseline vs DMA-pipelined) where LEO's
+    jaxpr front-end traces mem_waitcnt edges through the kernel's DMA
+    semaphores — the HipKittens case-study analogue.
+
+  PYTHONPATH=src python examples/analyze_and_optimize.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    from benchmarks.harness import analyze_variant
+    from benchmarks.workloads import _make_ltimes
+    from repro.core import TPU_V5E, analyze_module, from_function, EdgeKind
+
+    print("=== 1. XLA kernel: LTIMES (strided 3-tensor contraction) ===")
+    w = _make_ltimes("LTIMES")
+    base = analyze_variant(w.baseline, TPU_V5E)
+    print(f"baseline: {base.seconds*1e3:.3f} ms  root={base.root_cause}")
+    for r in base.recs[:2]:
+        print(f"  LEO: [{r.action}] {r.reason[:80]}")
+    opt = analyze_variant(w.optimized, TPU_V5E)
+    print(f"optimized: {opt.seconds*1e3:.3f} ms  "
+          f"speedup {base.seconds/opt.seconds:.2f}x")
+
+    print("\n=== 2. Pallas kernel: rmsnorm baseline vs DMA-pipelined ===")
+    from repro.kernels.rmsnorm import rmsnorm_baseline, rmsnorm_pipelined
+
+    x = jnp.zeros((256, 512), jnp.bfloat16)
+    scale = jnp.ones((512,), jnp.float32)
+    for name, fn in (("baseline", rmsnorm_baseline),
+                     ("pipelined", rmsnorm_pipelined)):
+        module = from_function(
+            lambda a, b, f=fn: f(a, b, interpret=True), x, scale)
+        an = analyze_module(module, TPU_V5E)
+        wc = [e for e in an.graph.edges if e.kind is EdgeKind.MEM_WAITCNT]
+        print(f"{name:>9s}: est {an.estimated_step_seconds*1e6:8.2f} us, "
+              f"{len(wc)} mem_waitcnt edges "
+              f"({'split-counter double buffering visible to LEO' if wc else 'no explicit DMA — implicit pipeline'})")
+
+    print("\nLEO traces the pipelined kernel's dma_start/dma_wait semaphore "
+          "pairs\n(the AMD s_waitcnt analogue) and attributes any exposed "
+          "wait to the\noldest in-flight copies — §III-E, reproduced on "
+          "Pallas kernels.")
+
+
+if __name__ == "__main__":
+    main()

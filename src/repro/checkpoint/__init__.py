@@ -1,0 +1,2 @@
+from .checkpointer import restore_checkpoint, save_checkpoint, list_checkpoints
+from .manager import CheckpointManager

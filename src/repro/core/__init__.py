@@ -1,0 +1,68 @@
+"""LEO core: cross-backend stall root-cause analysis via backward slicing.
+
+Public API:
+
+    from repro.core import analyze_hlo, analyze_module, cross_backend_analyze
+    from repro.core import from_function            # jaxpr/Pallas front-end
+    from repro.core import compute_roofline, TPU_V5E
+"""
+from .analyzer import (
+    LeoAnalysis,
+    analyze_hlo,
+    analyze_module,
+    cross_backend_analyze,
+)
+from .blame import BlameResult, attribute_blame
+from .cct import build_cct, format_hot_path
+from .collectives import (
+    collective_operand_bytes,
+    collective_summary,
+    total_collective_bytes,
+)
+from .coverage import single_dependency_coverage
+from .depgraph import DependencyGraph, Edge, build_dependency_graph
+from .hlo_parser import HloParser, parse_hlo
+from .hwmodel import (
+    HARDWARE_MODELS,
+    TPU_V4,
+    TPU_V5E,
+    TPU_V5P,
+    HardwareModel,
+    get_hardware_model,
+)
+from .isa import (
+    Computation,
+    EdgeKind,
+    Instruction,
+    Module,
+    OpClass,
+    ShapeInfo,
+    StallClass,
+    SyncKind,
+)
+from .jaxpr_frontend import from_function, from_jaxpr
+from .pruning import prune
+from .report import (
+    diagnostic_context,
+    recommendations,
+    save_json,
+    structured_report,
+)
+from .roofline import RooflineReport, compute_roofline
+from .sampler import StallProfile, VirtualSampler, sample
+from .slicing import StallChain, top_chains
+from .sync_trace import add_sync_edges
+
+__all__ = [
+    "LeoAnalysis", "analyze_hlo", "analyze_module", "cross_backend_analyze",
+    "BlameResult", "attribute_blame", "build_cct", "format_hot_path",
+    "collective_operand_bytes", "collective_summary", "total_collective_bytes",
+    "single_dependency_coverage", "DependencyGraph", "Edge",
+    "build_dependency_graph", "HloParser", "parse_hlo", "HARDWARE_MODELS",
+    "TPU_V4", "TPU_V5E", "TPU_V5P", "HardwareModel", "get_hardware_model",
+    "Computation", "EdgeKind", "Instruction", "Module", "OpClass",
+    "ShapeInfo", "StallClass", "SyncKind", "from_function", "from_jaxpr",
+    "prune", "diagnostic_context", "recommendations", "save_json",
+    "structured_report", "RooflineReport", "compute_roofline", "StallProfile",
+    "VirtualSampler", "sample", "StallChain", "top_chains", "add_sync_edges",
+]

@@ -1,0 +1,102 @@
+"""Collective-traffic extraction from compiled HLO (roofline + LEO shared).
+
+`compiled.cost_analysis()` does not expose collective bytes, so the roofline
+collective term is derived by parsing the HLO text and summing operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (the deliverable's prescription).  Two views:
+
+* `collective_operand_bytes(text)` — the literal prescription: sum of
+  operand bytes per collective opcode, trip-count-unaware (one pass of the
+  program text).
+* `collective_summary(module)` — the trip-aware, per-chip *wire* bytes LEO's
+  sampler uses (ring-algorithm effective bytes, scaled by loop trip counts),
+  per opcode with op counts.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from .hlo_parser import parse_hlo, parse_shape, _take_shape_prefix
+from .isa import Module, OpClass
+
+COLLECTIVE_OPCODES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[^\s=]+\s*=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+(?:\[[^\]]*\])?(?:\{[^}]*\})?)\s+"
+    r"(?P<opcode>" + "|".join(COLLECTIVE_OPCODES) + r")(?:-start|-done)?\(")
+
+
+@dataclass
+class CollectiveStats:
+    op_count: int = 0
+    operand_bytes: float = 0.0   # raw operand sizes (prescription)
+    wire_bytes: float = 0.0      # effective per-chip ICI bytes (trip-aware)
+
+
+def collective_operand_bytes(hlo_text: str) -> Dict[str, CollectiveStats]:
+    """Literal prescription: sum operand sizes of collective ops in the text.
+
+    Operand sizes are recovered from the producing instructions' shapes, so
+    we parse the module once and walk collective instructions.
+    """
+    module = parse_hlo(hlo_text)
+    return _operand_bytes_from_module(module, trip_aware=False)
+
+
+def collective_summary(module: Module,
+                       trip_aware: bool = True) -> Dict[str, CollectiveStats]:
+    return _operand_bytes_from_module(module, trip_aware=trip_aware)
+
+
+def _operand_bytes_from_module(module: Module,
+                               trip_aware: bool) -> Dict[str, CollectiveStats]:
+    stats: Dict[str, CollectiveStats] = {}
+    mults = _trip_multipliers(module) if trip_aware else {}
+    for comp in module.computations.values():
+        mult = mults.get(comp.name, 1.0) if trip_aware else 1.0
+        for instr in comp.instructions:
+            base = instr.opcode.replace("-start", "").replace("-done", "")
+            if base not in COLLECTIVE_OPCODES:
+                continue
+            if instr.opcode.endswith("-done"):
+                continue  # counted at the start op
+            s = stats.setdefault(base, CollectiveStats())
+            s.op_count += int(mult) if trip_aware else 1
+            operand_bytes = sum(
+                comp.get(o).shape.byte_size for o in instr.operands
+                if comp.get(o) is not None)
+            s.operand_bytes += mult * operand_bytes
+            s.wire_bytes += mult * instr.comm_bytes
+    return stats
+
+
+def _trip_multipliers(module: Module) -> Dict[str, float]:
+    """Execution multiplier per computation (product of enclosing trips)."""
+    mults: Dict[str, float] = {}
+
+    def visit(comp_name: str, mult: float, depth: int) -> None:
+        if depth > 16 or comp_name not in module.computations:
+            return
+        mults[comp_name] = max(mults.get(comp_name, 0.0), mult)
+        for instr in module.computations[comp_name].instructions:
+            inner = mult * (instr.trip_count if instr.opcode == "while" else 1)
+            for callee in instr.called_computations:
+                visit(callee, inner, depth + 1)
+
+    if module.entry:
+        visit(module.entry, 1.0, 0)
+    return mults
+
+
+def total_collective_bytes(module_or_text, trip_aware: bool = True) -> float:
+    if isinstance(module_or_text, str):
+        module = parse_hlo(module_or_text)
+    else:
+        module = module_or_text
+    return sum(s.wire_bytes for s in
+               collective_summary(module, trip_aware).values())

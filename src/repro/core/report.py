@@ -1,0 +1,247 @@
+"""Structured stall reports and diagnostic-context formats (paper §IV).
+
+Three context levels for downstream optimizers (human, LLM, or the
+deterministic rule-engine used by the Table-V benchmark analogue):
+
+  C       — code only;
+  C+S     — code plus raw per-instruction stall counts (what vendor
+            profilers give you);
+  C+L(S)  — code plus LEO's full root-cause analysis: ranked dependency
+            chains with blame attribution, scope (cross-layer) paths,
+            quantified cycles, and actionable recommendations.
+
+The recommendation rules map root-cause *patterns* to concrete
+transformations with machine-readable action ids, so the paper's claim —
+"structured dependency chains guide optimization better than raw metrics" —
+is testable here: the rule engine can act on C+L(S) but can only guess from
+C+S (it sees symptoms without causes).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .analyzer import LeoAnalysis
+from .isa import EdgeKind, Instruction, OpClass, StallClass
+
+
+@dataclass
+class Recommendation:
+    action: str          # machine-readable id (rule engine key)
+    target: str          # qualified instruction name
+    scope: str           # op_name scope of the target
+    reason: str          # human-readable explanation
+    est_cycles: float    # blame cycles addressed by this action
+
+
+_COLLECTIVE_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                   "collective-permute"}
+
+
+def recommendations(analysis: LeoAnalysis, limit: int = 8
+                    ) -> List[Recommendation]:
+    recs: List[Recommendation] = []
+    seen_actions = set()
+
+    def add(action: str, target: str, scope: str, reason: str,
+            cycles: float) -> None:
+        key = (action, scope.rsplit("/", 1)[0] if scope else target)
+        if key in seen_actions:
+            return
+        seen_actions.add(key)
+        recs.append(Recommendation(action=action, target=target, scope=scope,
+                                   reason=reason, est_cycles=cycles))
+
+    for qualified, cycles in analysis.blame.top_root_causes(24):
+        instr = analysis.module.find(qualified)
+        if instr is None:
+            continue
+        base = instr.opcode.replace("-start", "")
+        scope = instr.op_name
+        if base in _COLLECTIVE_OPS:
+            if instr.comm_bytes > 0:
+                add("overlap_or_reshard_collective", qualified, scope,
+                    f"{base} moves {instr.comm_bytes/2**20:.1f} MiB over ICI "
+                    f"per chip and blocks consumers; reshard to eliminate it "
+                    f"or overlap it with compute.", cycles)
+        elif instr.opcode in ("gather", "dynamic-slice"):
+            add("coalesce_or_tile_gather", qualified, scope,
+                "Indirect/strided load dominates stalls; restructure layout "
+                "or tile the accessed table into VMEM.", cycles)
+        elif instr.op_class is OpClass.PARAMETER:
+            add("cache_weights_vmem", qualified, scope,
+                "Streaming this operand from HBM bounds the consumer; raise "
+                "arithmetic intensity (fuse consumers / cache in VMEM / "
+                "re-tile).", cycles)
+        elif instr.op_class is OpClass.MATMUL:
+            add("increase_matmul_intensity", qualified, scope,
+                "Dependent matmul chain limits ILP; enlarge tiles, batch "
+                "small matmuls, or break the serial chain.", cycles)
+        elif instr.op_class in (OpClass.MEMORY_LOAD, OpClass.MEMORY_STORE,
+                                OpClass.DATA_MOVEMENT):
+            add("prefetch_or_double_buffer", qualified, scope,
+                "Exposed copy/load latency; issue the transfer earlier or "
+                "double-buffer.", cycles)
+        elif instr.op_class is OpClass.FUSION and instr.bytes_read > 0 and \
+                instr.flops / max(instr.bytes_read + instr.bytes_written,
+                                  1.0) < 2.0:
+            add("refuse_or_remat", qualified, scope,
+                "Low-arithmetic-intensity fused loop is HBM-bound; refuse "
+                "with producers/consumers or change remat policy.", cycles)
+
+    # Loop-carried serialization pattern.
+    carried = [e for e in analysis.graph.alive_edges
+               if e.kind is EdgeKind.LOOP_CARRIED]
+    if carried:
+        carried_blame = sum(analysis.blame.by_producer.get(e.producer, 0.0)
+                            for e in carried)
+        if carried_blame > 0.05 * max(analysis.profile.total_stall_cycles, 1):
+            e0 = max(carried, key=lambda e:
+                     analysis.blame.by_producer.get(e.producer, 0.0))
+            instr = analysis.module.find(e0.producer)
+            add("pipeline_loop_iterations", e0.producer,
+                instr.op_name if instr else "",
+                "Loop-carried dependency serializes iterations; software-"
+                "pipeline or widen the recurrence.", carried_blame)
+
+    diagnosed = list(analysis.blame.self_blame) + \
+        list(getattr(analysis.blame, "occupancy_blame", []))
+    for s in sorted(diagnosed, key=lambda s: -s.cycles)[:4]:
+        instr = analysis.module.find(s.qualified)
+        scope = instr.op_name if instr else ""
+        if s.subcategory == "memory latency":
+            add("tile_into_vmem", s.qualified, scope,
+                "Self-blamed memory latency with no producer to indict; the "
+                "access itself is the bottleneck — tile into VMEM.",
+                s.cycles)
+        elif s.subcategory == "compute saturation":
+            add("already_compute_bound", s.qualified, scope,
+                "Compute-saturated: optimization headroom is limited "
+                "(reduce FLOPs or change precision).", s.cycles)
+        elif s.subcategory == "indirect addressing":
+            add("coalesce_or_tile_gather", s.qualified, scope,
+                "Indirect addressing self-stall.", s.cycles)
+
+    recs.sort(key=lambda r: -r.est_cycles)
+    return recs[:limit]
+
+
+# --------------------------------------------------------------------------
+# Structured (JSON-able) report — the C+L(S) payload.
+# --------------------------------------------------------------------------
+
+def structured_report(analysis: LeoAnalysis, max_chains: int = 5) -> dict:
+    chains = []
+    for chain in analysis.chains[:max_chains]:
+        chains.append({
+            "stall_cycles": chain.total_stall_cycles,
+            "links": [{
+                "instruction": l.qualified,
+                "opcode": l.opcode,
+                "edge": l.edge_kind.value if l.edge_kind else None,
+                "blame_cycles": l.blame_cycles,
+                "scope": l.op_name,
+                "source": l.source,
+            } for l in chain.links],
+        })
+    stalls = []
+    for rec in analysis.profile.top_stalled(10):
+        instr = analysis.module.find(rec.qualified)
+        stalls.append({
+            "instruction": rec.qualified,
+            "opcode": instr.opcode if instr else "?",
+            "scope": instr.op_name if instr else "",
+            "latency_samples": rec.latency_samples,
+            "total_samples": rec.total_samples,
+            "breakdown": {k.value: v for k, v in rec.stall_breakdown.items()},
+        })
+    return {
+        "backend": analysis.hw.name,
+        "module": analysis.module.name,
+        "estimated_step_seconds": analysis.estimated_step_seconds,
+        "total_stall_cycles": analysis.profile.total_stall_cycles,
+        "single_dependency_coverage": {
+            "before": analysis.coverage_before.coverage,
+            "after": analysis.coverage_after.coverage,
+        },
+        "pruning": {
+            "initial_edges": analysis.prune_stats.initial_edges,
+            "pruned": analysis.prune_stats.pruned_by_stage,
+            "surviving": analysis.prune_stats.surviving_edges,
+        },
+        "top_stalls": stalls,
+        "root_cause_chains": chains,
+        "root_causes": [
+            {"instruction": q, "blame_cycles": c,
+             "scope": (analysis.module.find(q).op_name
+                       if analysis.module.find(q) else "")}
+            for q, c in analysis.blame.top_root_causes(10)],
+        "self_blame": [
+            {"instruction": s.qualified, "cycles": s.cycles,
+             "subcategory": s.subcategory}
+            for s in analysis.blame.self_blame[:10]],
+        "recommendations": [
+            {"action": r.action, "target": r.target, "scope": r.scope,
+             "reason": r.reason, "est_cycles": r.est_cycles}
+            for r in recommendations(analysis)],
+    }
+
+
+# --------------------------------------------------------------------------
+# Diagnostic-context levels for the §IV study.
+# --------------------------------------------------------------------------
+
+def context_c(code: str) -> str:
+    return f"### Kernel source\n```\n{code}\n```\n"
+
+
+def context_cs(code: str, analysis: LeoAnalysis) -> str:
+    """Code + raw per-instruction stall counts (vendor-profiler level)."""
+    lines = [context_c(code), "### Raw stall counts (PC sampling)"]
+    for rec in analysis.profile.top_stalled(15):
+        instr = analysis.module.find(rec.qualified)
+        op = instr.opcode if instr else "?"
+        brk = ", ".join(f"{k.value}={v:,.0f}"
+                        for k, v in rec.stall_breakdown.items())
+        lines.append(f"- `{rec.qualified}` [{op}]: "
+                     f"{rec.latency_samples:,.0f} stall cycles ({brk})")
+    return "\n".join(lines) + "\n"
+
+
+def context_cls(code: str, analysis: LeoAnalysis) -> str:
+    """Code + LEO's full root-cause analysis (the paper's C+L(S))."""
+    rep = structured_report(analysis)
+    lines = [context_c(code), "### LEO root-cause analysis"]
+    lines.append(f"Estimated step time: "
+                 f"{rep['estimated_step_seconds']*1e3:.3f} ms on "
+                 f"{rep['backend']}")
+    lines.append("#### Ranked dependency chains (symptom -> root cause)")
+    for i, chain in enumerate(analysis.chains[:5]):
+        lines.append(f"Chain {i+1} "
+                     f"({chain.total_stall_cycles:,.0f} stall cycles):")
+        lines.append(chain.describe())
+    lines.append("#### Recommendations")
+    for r in rep["recommendations"]:
+        lines.append(f"- [{r['action']}] {r['reason']} "
+                     f"(~{r['est_cycles']:,.0f} cycles at `{r['target']}`"
+                     f"{', scope ' + r['scope'] if r['scope'] else ''})")
+    return "\n".join(lines) + "\n"
+
+
+def diagnostic_context(level: str, code: str,
+                       analysis: Optional[LeoAnalysis] = None) -> str:
+    if level == "C":
+        return context_c(code)
+    if analysis is None:
+        raise ValueError("levels C+S and C+L(S) require an analysis")
+    if level == "C+S":
+        return context_cs(code, analysis)
+    if level == "C+L(S)":
+        return context_cls(code, analysis)
+    raise ValueError(f"unknown context level {level!r}")
+
+
+def save_json(analysis: LeoAnalysis, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(structured_report(analysis), f, indent=2)

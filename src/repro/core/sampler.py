@@ -1,0 +1,321 @@
+"""Virtual PC sampling: a deterministic in-order issue simulator.
+
+The paper consumes hardware PC-sampling stall profiles (CUPTI / ROCprofiler /
+Level Zero).  This container is CPU-only with the TPU as *target*, so LEO's
+input profile is produced by an analytical simulator that plays the role of
+the sampling hardware:
+
+* instructions issue in program order; each occupies the issue slot for its
+  throughput cost (`hw.issue_cycles`) and produces its result after its
+  roofline latency (`hw.latency_cycles`);
+* HBM traffic, async copies and async collective starts retire early and
+  complete in the background — the TPU analogue of latency hiding — so their
+  latency is only *exposed* when a consumer catches up with them;
+* when an instruction cannot issue because an operand (or synchronization
+  source) is not ready, the gap is recorded as *latency samples* against
+  that instruction, classified by the blocking producer's class into the
+  unified stall taxonomy (§II-D);
+* while-loops are simulated with a warm-up pass then a steady-state pass in
+  which loop-carried operands become available at (previous-iteration
+  completion − body makespan), and per-op statistics scale by trip count.
+
+The records mimic NVIDIA's two-level counters: ``total_samples`` (issue +
+stall occupancy, "samples") and ``latency_samples`` (stall-only).  The
+resulting profile is *shared ground truth* with `roofline.py` — the same
+hardware model produces the roofline terms, the stall profile, and the
+makespan used as estimated step time by the benchmark harness.
+
+On real hardware, `StallProfile` can instead be populated from measured
+xplane/profiler data — everything downstream of this interface is unchanged
+(the paper's modular "hpcanalysis" boundary).
+
+Known simplifications (mirroring paper §Limitations): branch probabilities
+are not modeled (all `conditional` branches simulate as executed); the
+in-order single-stream model cannot produce `not_selected`/`pipe_busy`
+stalls, so the taxonomy's those buckets stay empty on simulated profiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .hwmodel import HardwareModel
+from .isa import Instruction, Module, OpClass, StallClass, SyncKind
+
+
+def classify_blocker(consumer: Instruction,
+                     blocker: Optional[Instruction]) -> StallClass:
+    if blocker is None:
+        return StallClass.NONE
+    cls = blocker.op_class
+    if cls in (OpClass.MEMORY_LOAD, OpClass.MEMORY_STORE,
+               OpClass.DATA_MOVEMENT, OpClass.PARAMETER, OpClass.CONSTANT):
+        return StallClass.MEM_DEP
+    if cls is OpClass.COLLECTIVE:
+        return StallClass.COLLECTIVE_WAIT
+    if cls is OpClass.SYNC_SET:
+        return StallClass.COLLECTIVE_WAIT if blocker.comm_bytes > 0 \
+            else StallClass.MEM_DEP
+    if cls in (OpClass.SYNC_WAIT, OpClass.TUPLE, OpClass.CONTROL):
+        return StallClass.SYNC_WAIT
+    return StallClass.EXEC_DEP
+
+
+@dataclass
+class PCSampleRecord:
+    qualified: str
+    total_samples: float = 0.0     # issue occupancy + stalls (NVIDIA "samples")
+    latency_samples: float = 0.0   # stall-only ("latency samples")
+    stall_breakdown: Dict[StallClass, float] = field(default_factory=dict)
+    exec_count: float = 0.0
+    blockers: Dict[str, float] = field(default_factory=dict)  # qualified -> cycles
+
+    def add_stall(self, cls: StallClass, cycles: float,
+                  blocker: Optional[str]) -> None:
+        if cycles <= 0:
+            return
+        self.latency_samples += cycles
+        self.stall_breakdown[cls] = self.stall_breakdown.get(cls, 0.0) + cycles
+        if blocker:
+            self.blockers[blocker] = self.blockers.get(blocker, 0.0) + cycles
+
+    @property
+    def dominant_stall(self) -> StallClass:
+        if not self.stall_breakdown:
+            return StallClass.NONE
+        return max(self.stall_breakdown.items(), key=lambda kv: kv[1])[0]
+
+    def stall_fraction(self, cls: StallClass) -> float:
+        if self.latency_samples <= 0:
+            return 0.0
+        return self.stall_breakdown.get(cls, 0.0) / self.latency_samples
+
+
+@dataclass
+class StallProfile:
+    hw_name: str
+    records: Dict[str, PCSampleRecord] = field(default_factory=dict)
+    makespan_cycles: float = 0.0
+    clock_hz: float = 1e9
+
+    @property
+    def makespan_seconds(self) -> float:
+        return self.makespan_cycles / self.clock_hz
+
+    @property
+    def total_stall_cycles(self) -> float:
+        return sum(r.latency_samples for r in self.records.values())
+
+    def record(self, qualified: str) -> PCSampleRecord:
+        if qualified not in self.records:
+            self.records[qualified] = PCSampleRecord(qualified=qualified)
+        return self.records[qualified]
+
+    def top_stalled(self, n: int = 10) -> List[PCSampleRecord]:
+        return sorted((r for r in self.records.values()
+                       if r.latency_samples > 0),
+                      key=lambda r: -r.latency_samples)[:n]
+
+
+# Computation kinds that are not independently scheduled streams: their cost
+# is folded into the calling op (fusions) or they are scalar glue (reduce
+# combiners, loop conditions).
+_SKIP_KINDS = ("fusion", "reduce", "loop_cond")
+
+
+class VirtualSampler:
+    def __init__(self, module: Module, hw: HardwareModel):
+        self.module = module
+        self.hw = hw
+
+    # -- public ---------------------------------------------------------------
+
+    def run(self) -> StallProfile:
+        profile = StallProfile(hw_name=self.hw.name, clock_hz=self.hw.clock_hz)
+        entry = self.module.entry_computation
+        makespan = self._simulate(entry, 0.0, {}, 1.0, profile, depth=0)
+        profile.makespan_cycles = makespan
+        self._seed_unsampled(profile)
+        return profile
+
+    # -- simulation -------------------------------------------------------------
+
+    def _simulate(self, comp, t0: float, env: Dict[str, float], mult: float,
+                  profile: StallProfile, depth: int,
+                  loop_ctx: Optional[Dict[int, float]] = None) -> float:
+        """Simulate one computation; returns its end time (cycles)."""
+        if depth > 32:
+            return t0
+        t = t0
+        local_env = env
+        params = {p.name: p for p in comp.parameters}
+        for instr in comp.instructions:
+            q = instr.qualified_name
+            if instr.op_class in (OpClass.PARAMETER, OpClass.CONSTANT):
+                local_env[q] = t0
+                rec = profile.record(q)
+                rec.exec_count += mult
+                continue
+
+            ready, blocker = self._ready_time(comp, instr, local_env, params,
+                                              loop_ctx, t0)
+            issue_at = max(t, ready)
+            stall = issue_at - t
+            rec = profile.record(q)
+            rec.exec_count += mult
+            issue_cost = self._issue_cycles(instr, env, profile, issue_at,
+                                            mult, depth)
+            rec.total_samples += mult * (stall + issue_cost)
+            if stall > 0:
+                cls = classify_blocker(instr, blocker)
+                rec.add_stall(cls, mult * stall,
+                              blocker.qualified_name if blocker else None)
+            local_env[q] = issue_at + self._latency_cycles(instr, env, profile,
+                                                           issue_at, mult,
+                                                           depth)
+            t = issue_at + issue_cost
+        return t
+
+    def _ready_time(self, comp, instr: Instruction, env: Dict[str, float],
+                    params: Dict[str, Instruction],
+                    loop_ctx: Optional[Dict[int, float]],
+                    t0: float) -> Tuple[float, Optional[Instruction]]:
+        ready = t0
+        blocker: Optional[Instruction] = None
+
+        def consider(name: str, time: float) -> None:
+            nonlocal ready, blocker
+            if time > ready:
+                ready = time
+                blocker = comp.get(name) or self.module.find(name)
+
+        # Loop-carried values: gte(state_param, i) in steady state.
+        if loop_ctx is not None and instr.opcode == "get-tuple-element" and \
+                instr.operands and instr.operands[0] in params:
+            slot = int(instr.attributes.get("index", 0))
+            if slot in loop_ctx:
+                carried = loop_ctx[slot]
+                if carried > ready:
+                    ready = carried
+                    blocker = self._slot_def(comp, slot)
+                return ready, blocker
+
+        for op in instr.operands:
+            q = f"{comp.name}::{op}"
+            consider(op, env.get(q, t0))
+        # Synchronization waits (barrier / waitcnt semantics).
+        for waited in instr.sync.waits:
+            q = f"{comp.name}::{waited}"
+            consider(waited, env.get(q, t0))
+        return ready, blocker
+
+    def _slot_def(self, comp, slot: int) -> Optional[Instruction]:
+        root = comp.root
+        if root is not None and root.opcode == "tuple" and \
+                slot < len(root.operands):
+            return comp.get(root.operands[slot])
+        return root
+
+    def _issue_cycles(self, instr: Instruction, env, profile, issue_at, mult,
+                      depth) -> float:
+        if instr.opcode == "while":
+            return self._simulate_while(instr, env, profile, issue_at, mult,
+                                        depth)
+        if instr.opcode in ("call", "conditional"):
+            return self._simulate_called(instr, env, profile, issue_at, mult,
+                                         depth)
+        return self.hw.issue_cycles(instr)
+
+    def _latency_cycles(self, instr: Instruction, env, profile, issue_at,
+                        mult, depth) -> float:
+        if instr.opcode in ("while", "call", "conditional"):
+            # completion == end of the simulated body; issue_cycles covered it
+            return self._last_control_cost
+        return self.hw.latency_cycles(instr)
+
+    _last_control_cost: float = 0.0
+
+    def _simulate_called(self, instr: Instruction, env, profile, issue_at,
+                         mult, depth) -> float:
+        end = issue_at
+        for cname in instr.called_computations:
+            callee = self.module.computations.get(cname)
+            if callee is None or callee.kind in _SKIP_KINDS:
+                continue
+            sub_end = self._simulate(callee, issue_at, env, mult, profile,
+                                     depth + 1)
+            end = max(end, sub_end)
+        self._last_control_cost = end - issue_at
+        return end - issue_at
+
+    def _simulate_while(self, instr: Instruction, env, profile, issue_at,
+                        mult, depth) -> float:
+        body = None
+        for cname in instr.called_computations:
+            c = self.module.computations.get(cname)
+            if c is not None and c.kind == "loop_body":
+                body = c
+        if body is None:
+            self._last_control_cost = 0.0
+            return 0.0
+        trips = max(1, instr.trip_count)
+
+        # Pass A (warm-up): no loop-carried availability info.
+        warm = StallProfile(hw_name=self.hw.name, clock_hz=self.hw.clock_hz)
+        env_a: Dict[str, float] = {}
+        end_a = self._simulate(body, issue_at, env_a, 1.0, warm, depth + 1,
+                               loop_ctx={})
+        makespan_a = max(end_a - issue_at, 1.0)
+
+        # Steady-state loop context: slot value available at
+        # (producer completion in previous iteration) - body makespan.
+        loop_ctx: Dict[int, float] = {}
+        root = body.root
+        if root is not None and root.opcode == "tuple":
+            for slot, opname in enumerate(root.operands):
+                q = f"{body.name}::{opname}"
+                if q in env_a:
+                    loop_ctx[slot] = env_a[q] - makespan_a
+
+        # Pass B (steady state), recorded with weight mult * trips.
+        env_b: Dict[str, float] = {}
+        end_b = self._simulate(body, issue_at, env_b, mult * trips, profile,
+                               depth + 1, loop_ctx=loop_ctx)
+        makespan_b = max(end_b - issue_at, 1.0)
+        self._last_control_cost = trips * makespan_b
+        return self._last_control_cost
+
+    def _seed_unsampled(self, profile: StallProfile) -> None:
+        """Retain unsampled producers (paper §III-B): every instruction gets
+        a record so address-generation chains can receive blame.  Fusion- and
+        combiner-inner instructions execute as part of their caller, so they
+        inherit its execution multiplier (Stage-4 pruning must not discard
+        them as dead)."""
+        mults = self._execution_multipliers()
+        for instr in self.module.all_instructions():
+            rec = profile.record(instr.qualified_name)
+            if rec.exec_count == 0:
+                comp = self.module.computations.get(instr.computation)
+                if comp is not None and comp.kind in _SKIP_KINDS:
+                    rec.exec_count = mults.get(instr.computation, 1.0)
+
+    def _execution_multipliers(self) -> Dict[str, float]:
+        mults: Dict[str, float] = {}
+
+        def visit(comp_name: str, mult: float, depth: int) -> None:
+            if depth > 16 or comp_name not in self.module.computations:
+                return
+            mults[comp_name] = max(mults.get(comp_name, 0.0), mult)
+            for instr in self.module.computations[comp_name].instructions:
+                inner = mult * (instr.trip_count if instr.opcode == "while"
+                                else 1)
+                for callee in instr.called_computations:
+                    visit(callee, inner, depth + 1)
+
+        if self.module.entry:
+            visit(self.module.entry, 1.0, 0)
+        return mults
+
+
+def sample(module: Module, hw: HardwareModel) -> StallProfile:
+    return VirtualSampler(module, hw).run()

@@ -1,0 +1,2 @@
+from .synthetic import SyntheticConfig, SyntheticTokenDataset
+from .pipeline import DataPipeline

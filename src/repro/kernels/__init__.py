@@ -1,0 +1,1 @@
+"""Pallas TPU kernels: <name>.py + ops.py (jit wrappers) + ref.py (oracles)."""

@@ -1,0 +1,103 @@
+"""Pallas chunkwise mLSTM kernel (xLSTM matrix-memory recurrence).
+
+The (hd x hd) matrix state C, normalizer n and stabilizer m persist in VMEM
+scratch across the chunk grid axis (sequential on TPU), so the recurrent
+state never round-trips HBM between chunks — the same state-residency win
+flash attention gets for (m, l, acc).  Grid: (batch, head, n_chunks); one
+(chunk x hd) tile of q/k/v and a (chunk,) tile of each gate per step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+                  c_ref, n_ref, m_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)        # (C, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    li = li_ref[0, :, 0].astype(jnp.float32)         # (C,)
+    lf = lf_ref[0, :, 0].astype(jnp.float32)
+
+    f_cum = jnp.cumsum(lf)                           # F_t
+    f_tot = f_cum[-1]
+    s_t = li - f_cum
+    s_runmax = jax.lax.cummax(s_t, axis=0)
+    m_prev = m_ref[0]
+    m_u = jnp.maximum(m_prev, s_runmax) + f_cum      # (C,)
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    log_w = (f_cum[:, None] - f_cum[None, :] + li[None, :] - m_u[:, None])
+    w = jnp.where(idx >= jdx, jnp.exp(log_w), 0.0)   # (U, T)
+
+    qkt = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    scores = qkt * w
+    intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    norm_intra = scores.sum(axis=1)
+
+    d_u = jnp.exp(f_cum + m_prev - m_u)              # (C,)
+    inter = jax.lax.dot_general(q, c_ref[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * d_u[:, None]
+    norm_inter = (q @ n_ref[...]) * d_u
+    denom = jnp.maximum(jnp.abs(norm_inter + norm_intra), jnp.exp(-m_u))
+    o_ref[0, :, 0, :] = ((inter + intra) / denom[:, None]).astype(o_ref.dtype)
+
+    m_new = m_u[-1]
+    carry_decay = jnp.exp(f_tot + m_prev - m_new)
+    src_w = jnp.exp(li + (f_tot - f_cum) - m_new)    # (C,)
+    c_ref[...] = c_ref[...] * carry_decay + jax.lax.dot_general(
+        k * src_w[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = n_ref[...] * carry_decay + (k * src_w[:, None]).sum(axis=0)
+    m_ref[0] = m_new
+
+
+def mlstm_chunkwise(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    log_i: jnp.ndarray, log_f: jnp.ndarray, *,
+                    chunk: int = 64,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q/k/v (B,S,H,hd); log_i/log_f (B,S,H) pre-activations (log-space).
+
+    Returns the normalized hidden states (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk)
+    qkv_spec = pl.BlockSpec((1, chunk, 1, hd),
+                            lambda bi, hi, ci: (bi, ci, hi, 0))
+    gate_spec = pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[qkv_spec, qkv_spec, qkv_spec, gate_spec, gate_spec],
+        out_specs=qkv_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, log_i, log_f)

@@ -1,0 +1,44 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+`interpret=None` auto-selects: compiled Mosaic on TPU, interpret mode on CPU
+(the validation path this container uses).  These are the entry points model
+code calls when `attention_impl="pallas"` etc.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention
+from .mlstm_scan import mlstm_chunkwise
+from .rmsnorm import rmsnorm_baseline, rmsnorm_pipelined
+from .slstm_scan import slstm_scan
+from .ssm_scan import ssm_scan
+
+flash_attention_op = jax.jit(
+    flash_attention,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+
+rmsnorm_op = jax.jit(
+    rmsnorm_pipelined,
+    static_argnames=("eps", "block_rows", "interpret"))
+
+rmsnorm_baseline_op = jax.jit(
+    rmsnorm_baseline,
+    static_argnames=("eps", "block_rows", "interpret"))
+
+mlstm_chunkwise_op = jax.jit(
+    mlstm_chunkwise, static_argnames=("chunk", "interpret"))
+
+ssm_scan_op = jax.jit(ssm_scan, static_argnames=("chunk", "interpret"))
+
+slstm_scan_op = jax.jit(slstm_scan, static_argnames=("chunk", "interpret"))
+
+__all__ = [
+    "flash_attention", "flash_attention_op", "mlstm_chunkwise",
+    "mlstm_chunkwise_op", "rmsnorm_baseline", "rmsnorm_baseline_op",
+    "rmsnorm_pipelined", "rmsnorm_op", "slstm_scan", "slstm_scan_op",
+    "ssm_scan", "ssm_scan_op",
+]

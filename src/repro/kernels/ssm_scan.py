@@ -1,0 +1,61 @@
+"""Pallas selective-scan (Mamba-style SSM) kernel.
+
+Grid: (batch, n_chunks) with the (d_inner x N) state persistent in VMEM
+scratch across chunks.  Inside a chunk the recurrence h = a*h + bx runs as
+a `fori_loop` over time steps on (d_inner, N) vector tiles — d_inner is the
+lane dimension (multiples of 128 for the VPU), N=16 the sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(a_ref, bx_ref, c_ref, o_ref, h_ref, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        a_t = a_ref[0, t].astype(jnp.float32)       # (din, N)
+        bx_t = bx_ref[0, t].astype(jnp.float32)     # (din, N)
+        c_t = c_ref[0, t].astype(jnp.float32)       # (N,)
+        h = a_t * h + bx_t
+        y = h @ c_t                                  # (din,)
+        o_ref[0, t, :] = y.astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def ssm_scan(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray, *,
+             chunk: int = 16,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """a/bx (B,S,din,N) discretized recurrence terms; c (B,S,N) readout.
+
+    Returns y (B,S,din) with y_t = C_t . h_t, h_t = a_t * h_{t-1} + bx_t."""
+    b, s, din, n = a.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    term_spec = pl.BlockSpec((1, chunk, din, n), lambda bi, ci: (bi, ci, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=chunk),
+        grid=(b, nc),
+        in_specs=[term_spec, term_spec,
+                  pl.BlockSpec((1, chunk, n), lambda bi, ci: (bi, ci, 0))],
+        out_specs=pl.BlockSpec((1, chunk, din), lambda bi, ci: (bi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, din), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((din, n), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, c)

@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower one cell under a sequence of optimization
+variants, record roofline terms + LEO's diagnosis per step.
+
+Each variant is (name, model flags, TrainOptions overrides).  Results land
+in experiments/perf/<arch>__<shape>__<variant>.json; EXPERIMENTS.md §Perf is
+written from these artifacts.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell qwen2
+"""
+import argparse
+import json
+import time
+
+import jax
+
+
+CELLS = {
+    "qwen2": {
+        "arch": "qwen2-0.5b", "shape": "train_4k",
+        "variants": [
+            ("baseline", {}, {}),
+            ("flash_attention", {"attention_impl": "pallas_fused"}, {}),
+            ("flash+microbatch1",
+             {"attention_impl": "pallas_fused"}, {"microbatch": 1}),
+            ("flash+mb1+remat_none",
+             {"attention_impl": "pallas_fused"},
+             {"microbatch": 1, "remat": "none"}),
+            ("flash+mb1+bf16grads",
+             {"attention_impl": "pallas_fused"},
+             {"microbatch": 1, "grad_dtype": "bf16"}),
+        ],
+    },
+    "hymba": {
+        "arch": "hymba-1.5b", "shape": "train_4k",
+        "variants": [
+            ("baseline", {}, {}),
+            ("ssm_fused", {"ssm_fused": True}, {}),
+            ("ssm_fused+flash",
+             {"ssm_fused": True, "attention_impl": "pallas_fused"}, {}),
+            ("ssm+flash+mb2",
+             {"ssm_fused": True, "attention_impl": "pallas_fused"},
+             {"microbatch": 2}),
+            ("ssm_pallas+flash",
+             {"ssm_fused": True, "ssm_pallas": True,
+              "attention_impl": "pallas_fused"}, {}),
+        ],
+    },
+    "dsv2": {
+        "arch": "deepseek-v2-236b", "shape": "train_4k",
+        "variants": [
+            ("baseline", {}, {}),
+            ("ep_shardmap", {"moe_impl": "ep_shardmap"}, {}),
+            ("ep+flash",
+             {"moe_impl": "ep_shardmap",
+              "attention_impl": "pallas_fused"}, {}),
+            ("ep+flash+remat_none",
+             {"moe_impl": "ep_shardmap",
+              "attention_impl": "pallas_fused"}, {"remat": "none"}),
+            ("ep+flash+save_moe",
+             {"moe_impl": "ep_shardmap",
+              "attention_impl": "pallas_fused"},
+             {"remat": "group_save_moe"}),
+        ],
+    },
+}
+
+
+def run_variant(arch, shape_name, name, model_flags, opt_overrides,
+                mesh_kind, outdir, hw_name="tpu_v5e", analyze=True,
+                force=False):
+    from ..configs import get_config, get_shape, model_flops
+    from ..core import analyze_module, get_hardware_model, parse_hlo
+    from ..core.report import structured_report
+    from ..core.roofline import compute_roofline
+    from ..models.flags import flags as flags_ctx
+    from ..runtime.steps import TrainOptions, default_microbatch
+    from .dryrun import lower_cell
+    from .mesh import make_production_mesh
+
+    label = f"{arch}__{shape_name}__{name}"
+    path = os.path.join(outdir, label + ".json")
+    if os.path.exists(path) and not force:
+        return json.load(open(path))
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(len(mesh.devices.flat))
+    dp = chips // mesh.shape["model"]
+    defaults = dict(microbatch=default_microbatch(
+        cfg, shape.global_batch, shape.seq_len, dp))
+    defaults.update(opt_overrides)
+    opts = TrainOptions(**defaults)
+
+    with flags_ctx(**model_flags):
+        lowered, compiled, secs = lower_cell(cfg, shape, mesh, opts=opts)
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    module = parse_hlo(hlo, hints={"total_devices": chips})
+    hw = get_hardware_model(hw_name)
+    rl = compute_roofline(module, hw, chips=chips, label=label,
+                          model_flops=model_flops(cfg, shape),
+                          cost_analysis=compiled.cost_analysis(),
+                          memory_analysis=mem)
+    result = {"label": label, "variant": name, "flags": model_flags,
+              "options": opt_overrides, "compile_seconds": secs,
+              "roofline": rl.to_dict()}
+    if analyze:
+        an = analyze_module(module, hw)
+        rep = structured_report(an)
+        result["leo"] = {
+            "top_stalls": rep["top_stalls"][:3],
+            "root_causes": rep["root_causes"][:5],
+            "self_blame": rep["self_blame"][:3],
+            "recommendations": rep["recommendations"][:4],
+            "estimated_step_seconds": rep["estimated_step_seconds"],
+        }
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[{name}] {rl.summary_row()}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--outdir", default="experiments/perf")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    spec = CELLS[args.cell]
+    for name, model_flags, opt_overrides in spec["variants"]:
+        run_variant(spec["arch"], spec["shape"], name, model_flags,
+                    opt_overrides, args.mesh, args.outdir, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) for every model input.
+
+No device allocation ever happens here: params and decode state come from
+`jax.eval_shape` over the real initializers, batches are synthesized
+directly.  The same specs drive the multi-pod dry-run and the roofline
+benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import init_decode_state, init_params
+from ..runtime.steps import init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {"labels": SDS((b, s), jnp.int32)}
+        if cfg.frontend != "none":
+            specs["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            specs["tokens"] = SDS((b, s), jnp.int32)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"token": SDS((b,), jnp.int32), "pos": SDS((), jnp.int32)}
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_train_state(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Every input of the lowered step for this (arch, shape) cell."""
+    out: Dict[str, Any] = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "train":
+        out["state"] = abstract_train_state(cfg)
+    elif shape.kind == "decode":
+        out["params"] = abstract_params(cfg)
+        out["decode_state"] = abstract_decode_state(cfg, shape)
+    else:  # prefill
+        out["params"] = abstract_params(cfg)
+    return out

@@ -1,0 +1,15 @@
+"""Pure-JAX functional model zoo."""
+from .transformer import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    layer_descriptors,
+    layer_groups,
+    loss_fn,
+)
+
+__all__ = [
+    "decode_step", "forward", "init_decode_state", "init_params",
+    "layer_descriptors", "layer_groups", "loss_fn",
+]

@@ -1,0 +1,9 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .grad import clip_by_global_norm, GradAccumulator, compress_gradients
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "linear_warmup_cosine", "clip_by_global_norm", "GradAccumulator",
+    "compress_gradients",
+]

@@ -1,0 +1,66 @@
+"""AdamW with bf16 params + f32 master/moment states (ZeRO-shardable).
+
+State layout mirrors the param tree leaf-for-leaf so the sharding rules in
+`repro.parallel.sharding` apply to optimizer state directly (with optional
+extra data-parallel sharding = ZeRO-1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    keep_master: bool = True   # fp32 master copy when params are bf16
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params,
+                 lr_scale: jnp.ndarray | float = 1.0
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def leaf(g, mu, nu, master):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        update = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        master = master - lr * (update + cfg.weight_decay * master)
+        return mu, nu, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    out = [leaf(g, m, n, w) for g, m, n, w in
+           zip(flat_g, flat_mu, flat_nu, flat_ma)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    flat_p = treedef.flatten_up_to(params)
+    new_params = jax.tree.unflatten(
+        treedef, [m.astype(p.dtype) for m, p in
+                  zip([o[2] for o in out], flat_p)])
+    return new_params, {"mu": mu, "nu": nu, "master": master, "count": count}

@@ -1,0 +1,81 @@
+"""Gradient utilities: clipping, micro-batch accumulation, compression.
+
+`compress_gradients` implements error-feedback int8 compression for the
+DP all-reduce (a distributed-optimization trick for bandwidth-bound meshes):
+gradients are quantized to int8 with a per-tensor scale before the reduce
+and the quantization error is fed back into the next step's gradients, which
+keeps convergence while cutting DP collective bytes 4x for f32 / 2x for bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+class GradAccumulator:
+    """Host-side micro-batch accumulation driver.
+
+    The jitted step takes (params, microbatch) -> grads; this accumulates
+    `n_micro` of them before the optimizer update — how large global batches
+    run on meshes whose per-device memory can't hold them at once.
+    """
+
+    def __init__(self, n_micro: int):
+        self.n_micro = n_micro
+
+    def split(self, batch):
+        def sp(x):
+            b = x.shape[0]
+            assert b % self.n_micro == 0
+            return x.reshape(self.n_micro, b // self.n_micro, *x.shape[1:])
+        return jax.tree.map(sp, batch)
+
+    @staticmethod
+    def accumulate_scan(grad_fn, params, micro_batches):
+        """jit-friendly accumulation via lax.scan over the micro axis."""
+        def body(acc, mb):
+            g = grad_fn(params, mb)
+            return jax.tree.map(jnp.add, acc, g), None
+        g0 = jax.tree.map(
+            lambda mb: None, micro_batches)  # placeholder (unused)
+        first = grad_fn(params, jax.tree.map(lambda x: x[0], micro_batches))
+        rest = jax.tree.map(lambda x: x[1:], micro_batches)
+        acc, _ = jax.lax.scan(body, first, rest)
+        n = jax.tree.leaves(micro_batches)[0].shape[0]
+        return jax.tree.map(lambda g: g / n, acc)
+
+
+def compress_gradients(grads, error_feedback: Optional[Any] = None
+                       ) -> Tuple[Any, Any]:
+    """Int8 quantization with error feedback. Returns (q_grads_f, new_ef).
+
+    The returned gradients are dequantized back to the original dtype (the
+    quantization round-trip models the wire format); `new_ef` carries the
+    residual to add into the next step.
+    """
+    if error_feedback is None:
+        error_feedback = jax.tree.map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def leaf(g, ef):
+        gf = g.astype(jnp.float32) + ef
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_feedback)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

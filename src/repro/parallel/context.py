@@ -1,0 +1,34 @@
+"""Ambient mesh context for shard_map-based layers.
+
+The launcher (`dryrun.py`/`train.py`) sets the active mesh here so model
+code deep inside a scanned layer stack can build `shard_map` regions without
+threading the mesh through every call signature.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: Optional[Mesh] = None
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    global _CURRENT
+    _CURRENT = mesh
+
+
+def get_current_mesh() -> Optional[Mesh]:
+    return _CURRENT
+
+
+@contextmanager
+def mesh_context(mesh: Mesh):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = mesh
+    try:
+        yield mesh
+    finally:
+        _CURRENT = prev

@@ -1,0 +1,15 @@
+from .steps import (
+    TrainOptions,
+    default_microbatch,
+    init_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+from .fault import (
+    ElasticController,
+    FaultTolerantLoop,
+    HeartbeatMonitor,
+    MeshPlan,
+    StragglerPolicy,
+)

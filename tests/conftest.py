@@ -1,0 +1,84 @@
+"""Shared fixtures. NOTE: device count must stay 1 here (smoke tests and
+benches see the real CPU); only launch/dryrun.py forces 512 host devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_compiled_step():
+    """A small sharded train-step-like program compiled on 1 CPU device."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(w1, w2, x):
+        def body(c, _):
+            h = jnp.einsum("bd,df->bf", c, w1)
+            h = jax.nn.gelu(h)
+            c = jnp.einsum("bf,fd->bd", h, w2)
+            return c, ()
+        c, _ = jax.lax.scan(body, x, None, length=3)
+        return c.sum()
+
+    w1 = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16)
+    w2 = jax.ShapeDtypeStruct((128, 64), jnp.bfloat16)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.bfloat16)
+    lowered = jax.jit(step).lower(w1, w2, x)
+    return lowered.compile()
+
+
+# Hand-written, format-valid HLO exercising async pairs (the NVIDIA-barrier
+# analogue), tokens (SWSB analogue), and a while loop — features the CPU
+# backend does not emit.
+ASYNC_HLO = """\
+HloModule fixture_async
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.2 = f32[] add(%a, %b)
+}
+
+%body.1 (p.1: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p.1 = (s32[], f32[128,128]) parameter(0)
+  %iv = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %iv2 = s32[] add(%iv, %one)
+  %acc = f32[128,128] get-tuple-element(%p.1), index=1
+  %gain = f32[128,128] multiply(%acc, %acc)
+  ROOT %out = (s32[], f32[128,128]) tuple(%iv2, %gain)
+}
+
+%cond.1 (p.2: (s32[], f32[128,128])) -> pred[] {
+  %p.2 = (s32[], f32[128,128]) parameter(0)
+  %iv3 = s32[] get-tuple-element(%p.2), index=0
+  %lim = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv3, %lim), direction=LT
+}
+
+ENTRY %main.1 (arg0: f32[128,128], arg1: f32[128,128]) -> f32[128,128] {
+  %arg0 = f32[128,128] parameter(0)
+  %arg1 = f32[128,128] parameter(1)
+  %gather.1 = f32[128,128] gather(%arg0, %arg1), metadata={op_name="jit(step)/model/embed/gather"}
+  %ag-start = f32[128,128] all-gather-start(%gather.1), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}, metadata={op_name="jit(step)/model/layer/allgather"}
+  %indep = f32[128,128] multiply(%arg1, %arg1)
+  %ag-done = f32[128,128] all-gather-done(%ag-start), metadata={op_name="jit(step)/model/layer/allgather"}
+  %dot.1 = f32[128,128] dot(%ag-done, %indep), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="jit(step)/model/layer/mlp/dot_general" source_file="model.py" source_line=42}
+  %tok0 = token[] after-all(%gather.1)
+  %send.1 = (f32[128,128], u32[], token[]) send(%dot.1, %tok0), channel_id=2
+  %send-done.1 = token[] send-done(%send.1), channel_id=2
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,128]) tuple(%zero, %dot.1)
+  %loop = (s32[], f32[128,128]) while(%init), condition=%cond.1, body=%body.1
+  %result = f32[128,128] get-tuple-element(%loop), index=1
+  ROOT %final = f32[128,128] add(%result, %indep)
+}
+"""
+
+
+@pytest.fixture()
+def async_hlo_text():
+    return ASYNC_HLO

@@ -1,0 +1,266 @@
+"""Dependency graph, sync tracing, pruning, blame, slicing, coverage tests."""
+import pytest
+
+from repro.core import (
+    EdgeKind,
+    OpClass,
+    StallClass,
+    TPU_V5E,
+    TPU_V5P,
+    analyze_hlo,
+    analyze_module,
+    build_dependency_graph,
+    parse_hlo,
+    sample,
+    single_dependency_coverage,
+)
+from repro.core.blame import attribute_blame
+from repro.core.isa import (
+    Computation,
+    Instruction,
+    Module,
+    ShapeInfo,
+    SyncInfo,
+    SyncKind,
+    classify_opcode,
+)
+from repro.core.pruning import prune
+from repro.core.sync_trace import add_sync_edges
+
+
+def _mk(name, opcode, operands=(), comp="c", sync=None, shape=None, **kw):
+    instr = Instruction(
+        name=name, opcode=opcode, op_class=classify_opcode(opcode),
+        shape=shape or ShapeInfo(dtype="f32", dims=(128, 128)),
+        operands=tuple(operands), computation=comp, index=0, **kw)
+    if sync is not None:
+        instr.sync = sync
+    return instr
+
+
+def _module(instrs, name="synthetic"):
+    comp = Computation(name="c", kind="entry")
+    for i in instrs:
+        comp.add(i)
+    instrs[-1].is_root = True
+    mod = Module(name=name, entry="c")
+    mod.add_computation(comp)
+    return mod
+
+
+class TestDependencyGraph:
+    def test_simple_raw_edges(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        deps = {(e.producer, e.consumer) for e in graph.edges}
+        assert ("main.1::ag-done", "main.1::dot.1") in deps
+        assert ("main.1::indep", "main.1::dot.1") in deps
+
+    def test_sees_through_tuple_glue(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        # %final adds %result = gte(loop, 1); resolution must reach the
+        # loop-body producer %gain (through while + tuple glue).
+        producers = {e.producer for e in graph.deps_of("main.1::final",
+                                                       alive_only=False)}
+        assert "body.1::gain" in producers
+
+    def test_loop_carried_edge(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        kinds = {e.kind for e in graph.deps_of("body.1::gain",
+                                               alive_only=False)}
+        assert EdgeKind.LOOP_CARRIED in kinds
+
+    def test_cross_computation_resolution(self, async_hlo_text):
+        """A use inside the loop body must also reach the init value in the
+        caller (paper: union of reaching defs at joins)."""
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        producers = {e.producer for e in graph.deps_of("body.1::gain",
+                                                       alive_only=False)}
+        assert "main.1::dot.1" in producers  # init path
+
+    def test_predicate_edge(self):
+        instrs = [
+            _mk("p", "parameter", shape=ShapeInfo("pred", (128,)),
+                attributes={"literal": "0"}),
+            _mk("a", "parameter", attributes={"literal": "1"}),
+            _mk("b", "parameter", attributes={"literal": "2"}),
+            _mk("sel", "select", ("p", "a", "b")),
+        ]
+        mod = _module(instrs)
+        graph = build_dependency_graph(mod, TPU_V5E)
+        kinds = {(e.producer, e.kind) for e in graph.deps_of(
+            "c::sel", alive_only=False)}
+        assert ("c::p", EdgeKind.PREDICATE) in kinds
+        assert ("c::a", EdgeKind.REG_RAW) in kinds
+
+
+class TestSyncTracing:
+    def test_barrier_edges(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        n = add_sync_edges(graph)
+        assert n > 0
+        edges = {(e.producer, e.consumer) for e in graph.edges
+                 if e.kind is EdgeKind.MEM_BARRIER}
+        assert ("main.1::ag-start", "main.1::ag-done") in edges
+        # ...and *through* the start to the gather it transfers.
+        assert ("main.1::gather.1", "main.1::ag-done") in edges
+
+    def test_token_edges(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        add_sync_edges(graph)
+        kinds = {e.kind for e in graph.edges}
+        assert EdgeKind.MEM_SWSB in kinds
+
+    def test_waitcnt_oldest_m_minus_n(self):
+        """s_waitcnt semantics: wait(counter=N) blames the (M-N) oldest."""
+        sem = "sem0"
+        instrs = [
+            _mk("a", "parameter", attributes={"literal": "0"}),
+            _mk("d1", "dma_start", ("a",),
+                sync=SyncInfo(SyncKind.WAITCNT, sets=(sem,))),
+            _mk("d2", "dma_start", ("a",),
+                sync=SyncInfo(SyncKind.WAITCNT, sets=(sem,))),
+            _mk("d3", "dma_start", ("a",),
+                sync=SyncInfo(SyncKind.WAITCNT, sets=(sem,))),
+            _mk("w1", "dma_wait", (),
+                sync=SyncInfo(SyncKind.WAITCNT, waits=(sem,), counter=1)),
+            _mk("use", "add", ("a", "a")),
+        ]
+        mod = _module(instrs)
+        graph = build_dependency_graph(mod, TPU_V5E)
+        add_sync_edges(graph)
+        blamed = {e.producer for e in graph.edges
+                  if e.kind is EdgeKind.MEM_WAITCNT and e.consumer == "c::w1"}
+        # M=3 pending, N=1 allowed outstanding -> blame the 2 oldest.
+        assert "c::d1" in blamed and "c::d2" in blamed
+        assert "c::d3" not in blamed
+
+    def test_waitcnt_epoch_boundary(self):
+        sem = "s"
+        instrs = [
+            _mk("a", "parameter", attributes={"literal": "0"}),
+            _mk("d1", "dma_start", ("a",),
+                sync=SyncInfo(SyncKind.WAITCNT, sets=(sem,))),
+            _mk("w0", "dma_wait", (),
+                sync=SyncInfo(SyncKind.WAITCNT, waits=(sem,), counter=0)),
+            _mk("d2", "dma_start", ("a",),
+                sync=SyncInfo(SyncKind.WAITCNT, sets=(sem,))),
+            _mk("w1", "dma_wait", (),
+                sync=SyncInfo(SyncKind.WAITCNT, waits=(sem,), counter=0)),
+            _mk("use", "add", ("a", "a")),
+        ]
+        mod = _module(instrs)
+        graph = build_dependency_graph(mod, TPU_V5E)
+        add_sync_edges(graph)
+        blamed_w1 = {e.producer for e in graph.edges
+                     if e.kind is EdgeKind.MEM_WAITCNT and
+                     e.consumer == "c::w1"}
+        # d1 drained at the w0 epoch; d2 (plus reach-through to its data
+        # operand "a") is what w1 actually waits on.
+        assert "c::d2" in blamed_w1 and "c::d1" not in blamed_w1
+
+
+class TestPruning:
+    def test_sync_edges_survive(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        add_sync_edges(graph)
+        profile = sample(mod, TPU_V5E)
+        prune(graph, profile, TPU_V5E)
+        sync_alive = [e for e in graph.alive_edges if e.kind.is_sync]
+        assert sync_alive
+
+    def test_barrier_stage_prunes_unwaited(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        graph = build_dependency_graph(mod, TPU_V5E)
+        profile = sample(mod, TPU_V5E)
+        prune(graph, profile, TPU_V5E)
+        # reg edge ag-start -> anything that doesn't wait must be pruned
+        for e in graph.edges:
+            if e.producer == "main.1::ag-start" and not e.kind.is_sync:
+                consumer = mod.find(e.consumer)
+                if "ag-start" not in consumer.sync.waits:
+                    assert e.pruned_by == "barrier"
+
+    def test_coverage_improves(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        an = analyze_hlo(async_hlo_text, hints={"total_devices": 8})
+        assert an.coverage_after.coverage >= an.coverage_before.coverage - 1e-9
+
+
+class TestBlame:
+    def test_conservation(self, async_hlo_text):
+        """Eq. 1 is a partition of S_j: attributed + self-blame == total."""
+        an = analyze_hlo(async_hlo_text, hints={"total_devices": 8})
+        attributed = sum(e.cycles for e in an.blame.entries)
+        self_blamed = sum(s.cycles for s in an.blame.self_blame)
+        assert attributed + self_blamed == pytest.approx(
+            an.profile.total_stall_cycles, rel=1e-6)
+
+    def test_factors_recorded(self, async_hlo_text):
+        an = analyze_hlo(async_hlo_text, hints={"total_devices": 8})
+        for e in an.blame.entries[:5]:
+            assert set(e.factors) == {"dist", "eff", "issue", "match"}
+            assert 0 <= e.factors["dist"] <= 1.0 + 1e-9
+
+    def test_self_blame_subcategories(self):
+        instrs = [
+            _mk("a", "parameter", attributes={"literal": "0"},
+                shape=ShapeInfo("f32", (4096, 4096))),
+            _mk("idx", "parameter", attributes={"literal": "1"},
+                shape=ShapeInfo("s32", (64,))),
+            _mk("g", "gather", ("a", "idx"),
+                shape=ShapeInfo("f32", (64, 4096))),
+            _mk("r", "add", ("g", "g")),
+        ]
+        mod = _module(instrs)
+        an = analyze_module(mod, TPU_V5E)
+        cats = {s.subcategory for s in an.blame.self_blame}
+        # whatever stalls without surviving deps classifies meaningfully
+        assert cats <= {"memory latency", "compute saturation",
+                        "synchronization overhead", "collective wait",
+                        "instruction fetch", "indirect addressing",
+                        "unclassified"}
+
+
+class TestEndToEnd:
+    def test_real_program(self, small_compiled_step):
+        an = analyze_hlo(small_compiled_step.as_text())
+        assert an.profile.total_stall_cycles > 0
+        assert an.chains
+        assert an.blame.top_root_causes(3)
+        assert an.estimated_step_seconds > 0
+
+    def test_cross_backend_divergence_possible(self, small_compiled_step):
+        txt = small_compiled_step.as_text()
+        a_e = analyze_hlo(txt, hw=TPU_V5E)
+        a_p = analyze_hlo(txt, hw=TPU_V5P)
+        # v5p is strictly faster on every axis for the same program
+        assert a_p.estimated_step_seconds < a_e.estimated_step_seconds
+
+    def test_cct_hot_path(self, small_compiled_step):
+        an = analyze_hlo(small_compiled_step.as_text())
+        hot = an.cct.hot_path()
+        assert len(hot) >= 1
+
+    def test_structured_report_roundtrip(self, small_compiled_step):
+        import json
+        from repro.core import structured_report
+        an = analyze_hlo(small_compiled_step.as_text())
+        rep = structured_report(an)
+        js = json.dumps(rep)
+        assert json.loads(js)["module"]
+
+    def test_diagnostic_context_levels(self, small_compiled_step):
+        from repro.core import diagnostic_context
+        an = analyze_hlo(small_compiled_step.as_text())
+        c = diagnostic_context("C", "code here")
+        cs = diagnostic_context("C+S", "code here", an)
+        cls_ = diagnostic_context("C+L(S)", "code here", an)
+        assert len(c) < len(cs) < len(cls_)
+        assert "root-cause" in cls_ or "Recommendations" in cls_

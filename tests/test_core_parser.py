@@ -1,0 +1,159 @@
+"""HLO parser unit tests: shapes, instructions, costs, trip counts,
+collectives, metadata — validated against both fixtures and a real compiled
+XLA program."""
+import pytest
+
+from repro.core.hlo_parser import parse_hlo, parse_shape
+from repro.core.isa import OpClass, ShapeInfo, SyncKind
+from repro.core.collectives import (
+    collective_operand_bytes,
+    collective_summary,
+    total_collective_bytes,
+)
+
+
+class TestShapeParsing:
+    def test_array(self):
+        s = parse_shape("bf16[4,128]{1,0}")
+        assert s.dtype == "bf16" and s.dims == (4, 128)
+        assert s.byte_size == 4 * 128 * 2
+
+    def test_layout_with_tiling(self):
+        s = parse_shape("f32[16,1024]{1,0:T(8,128)}")
+        assert s.dims == (16, 1024) and s.byte_size == 16 * 1024 * 4
+
+    def test_scalar(self):
+        s = parse_shape("pred[]")
+        assert s.dtype == "pred" and s.dims == () and s.num_elements == 1
+
+    def test_tuple(self):
+        s = parse_shape("(f32[2,4]{1,0}, s32[])")
+        assert s.is_tuple and len(s.elements) == 2
+        assert s.byte_size == 2 * 4 * 4 + 4
+
+    def test_token(self):
+        assert parse_shape("token[]").byte_size == 0
+
+
+class TestFixtureParsing:
+    def test_structure(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        assert mod.entry == "main.1"
+        assert set(mod.computations) == {
+            "add.1", "body.1", "cond.1", "main.1"}
+        assert mod.computations["body.1"].kind == "loop_body"
+        assert mod.computations["cond.1"].kind == "loop_cond"
+
+    def test_trip_count_from_condition(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text)
+        loop = mod.computations["main.1"].get("loop")
+        assert loop.trip_count == 5
+
+    def test_async_pair_sync_info(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text)
+        main = mod.computations["main.1"]
+        start = main.get("ag-start")
+        done = main.get("ag-done")
+        assert start.op_class is OpClass.SYNC_SET
+        assert start.sync.kind is SyncKind.BARRIER
+        assert start.sync.sets == ("ag-start",)
+        assert done.op_class is OpClass.SYNC_WAIT
+        assert done.sync.waits == ("ag-start",)
+
+    def test_token_sync_info(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text)
+        tok = mod.computations["main.1"].get("tok0")
+        assert tok.sync.kind is SyncKind.TOKEN
+
+    def test_metadata(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text)
+        dot = mod.computations["main.1"].get("dot.1")
+        assert dot.op_name == "jit(step)/model/layer/mlp/dot_general"
+        assert dot.source_file == "model.py" and dot.source_line == 42
+
+    def test_dot_flops(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text)
+        dot = mod.computations["main.1"].get("dot.1")
+        assert dot.flops == 2 * 128 * 128 * 128
+
+    def test_collective_bytes(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        start = mod.computations["main.1"].get("ag-start")
+        # all-gather over groups of 4: out_bytes * (n-1)/n
+        assert start.comm_bytes == pytest.approx(
+            128 * 128 * 4 * 3 / 4)
+
+    def test_trip_aware_flops(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text)
+        # multiply in loop body: 128*128 flops x 5 trips contributes
+        # body: multiply (128*128) + iv add (1); cond: compare (1)
+        diff = mod.total_flops(True) - mod.total_flops(False)
+        assert diff == pytest.approx(4 * (128 * 128 + 2))  # 4 extra trips
+
+
+class TestAgainstRealXLA:
+    def test_flops_match_cost_analysis(self, small_compiled_step):
+        ca = small_compiled_step.cost_analysis()
+        mod = parse_hlo(small_compiled_step.as_text())
+        # XLA counts loop bodies once; our trip-unaware total should agree
+        # within 20% (fusion/layout noise).
+        ours = mod.total_flops(trip_aware=False)
+        assert ours == pytest.approx(ca["flops"], rel=0.2)
+
+    def test_trip_aware_exceeds_xla(self, small_compiled_step):
+        mod = parse_hlo(small_compiled_step.as_text())
+        assert mod.total_flops(True) > 2.0 * mod.total_flops(False)
+
+    def test_all_instructions_have_shapes(self, small_compiled_step):
+        mod = parse_hlo(small_compiled_step.as_text())
+        for instr in mod.all_instructions():
+            assert isinstance(instr.shape, ShapeInfo)
+
+
+class TestCollectiveExtraction:
+    def test_operand_bytes_prescription(self, async_hlo_text):
+        stats = collective_operand_bytes(async_hlo_text)
+        assert "all-gather" in stats
+        assert stats["all-gather"].op_count == 1
+        assert stats["all-gather"].operand_bytes == 128 * 128 * 4
+
+    def test_total_wire_bytes(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        assert total_collective_bytes(mod) > 0
+
+    def test_collective_in_loop_scales_with_trips(self):
+        text = """\
+HloModule loop_coll
+%add.9 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+%body.9 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c1 = s32[] constant(1)
+  %i2 = s32[] add(%i, %c1)
+  %x = f32[64] get-tuple-element(%p), index=1
+  %ar = f32[64] all-reduce(%x), replica_groups=[1,4]<=[4], to_apply=%add.9
+  ROOT %t = (s32[], f32[64]) tuple(%i2, %ar)
+}
+%cond.9 (p2: (s32[], f32[64])) -> pred[] {
+  %p2 = (s32[], f32[64]) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %lim = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i3, %lim), direction=LT
+}
+ENTRY %e (a0: f32[64]) -> (s32[], f32[64]) {
+  %a0 = f32[64] parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[64]) tuple(%z, %a0)
+  ROOT %w = (s32[], f32[64]) while(%init), condition=%cond.9, body=%body.9
+}
+"""
+        mod = parse_hlo(text, hints={"total_devices": 4})
+        summary = collective_summary(mod, trip_aware=True)
+        per_op = 2 * 64 * 4 * 3 / 4
+        assert summary["all-reduce"].wire_bytes == pytest.approx(7 * per_op)
+        unaware = collective_summary(mod, trip_aware=False)
+        assert unaware["all-reduce"].wire_bytes == pytest.approx(per_op)

@@ -1,0 +1,167 @@
+"""Property-based tests (hypothesis) for LEO's invariants.
+
+Strategy: generate random-but-valid instruction streams (DAG programs in
+the unified model) and assert pipeline invariants that must hold for *any*
+program:
+
+  * blame conservation: attributed + self-blame cycles == total stall cycles
+  * pruning soundness: sync edges never pruned by opcode/latency stages
+  * coverage bounds and monotone edge counts
+  * sampler sanity: makespan >= critical-resource occupancy of any op
+  * parser round-trip on synthesized HLO text
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TPU_V5E,
+    analyze_module,
+    build_dependency_graph,
+    parse_hlo,
+    sample,
+)
+from repro.core.isa import (
+    Computation,
+    Instruction,
+    Module,
+    OpClass,
+    ShapeInfo,
+    classify_opcode,
+)
+
+_OPCODES = ["add", "multiply", "exponential", "dot", "gather",
+            "dynamic-slice", "transpose", "reduce", "copy", "tanh"]
+
+
+@st.composite
+def instruction_streams(draw):
+    """A random straight-line SSA program with 3..24 instructions."""
+    n = draw(st.integers(3, 24))
+    n_params = draw(st.integers(1, 3))
+    dims = draw(st.sampled_from([(64,), (32, 64), (8, 128)]))
+    instrs = []
+    for i in range(n_params):
+        instrs.append(Instruction(
+            name=f"p{i}", opcode="parameter", op_class=OpClass.PARAMETER,
+            shape=ShapeInfo("f32", dims), operands=(),
+            computation="c", index=0, attributes={"literal": str(i)}))
+    for i in range(n):
+        opcode = draw(st.sampled_from(_OPCODES))
+        n_ops = 2 if opcode in ("add", "multiply", "dot", "gather") else 1
+        avail = [ins.name for ins in instrs]
+        operands = tuple(draw(st.sampled_from(avail)) for _ in range(n_ops))
+        instr = Instruction(
+            name=f"v{i}", opcode=opcode, op_class=classify_opcode(opcode),
+            shape=ShapeInfo("f32", dims), operands=operands,
+            computation="c", index=0)
+        elems = instr.shape.num_elements
+        if opcode == "dot":
+            instr.flops = 2.0 * elems * dims[-1]
+        elif instr.op_class in (OpClass.COMPUTE, OpClass.REDUCE):
+            instr.flops = float(elems)
+        instr.bytes_read = float(sum(
+            ShapeInfo("f32", dims).byte_size for _ in operands))
+        instr.bytes_written = float(instr.shape.byte_size)
+        instrs.append(instr)
+    comp = Computation(name="c", kind="entry")
+    for ins in instrs:
+        comp.add(ins)
+    instrs[-1].is_root = True
+    mod = Module(name="prop", entry="c")
+    mod.add_computation(comp)
+    return mod
+
+
+@settings(max_examples=40, deadline=None)
+@given(instruction_streams())
+def test_blame_conservation(module):
+    an = analyze_module(module, TPU_V5E)
+    attributed = sum(e.cycles for e in an.blame.entries)
+    self_blamed = sum(s.cycles for s in an.blame.self_blame)
+    total = an.profile.total_stall_cycles
+    assert attributed + self_blamed == pytest.approx(total, rel=1e-6, abs=1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(instruction_streams())
+def test_pruning_never_removes_sync_edges(module):
+    an = analyze_module(module, TPU_V5E)
+    for e in an.graph.edges:
+        if e.kind.is_sync:
+            assert e.pruned_by in (None, "execution")
+
+
+@settings(max_examples=40, deadline=None)
+@given(instruction_streams())
+def test_coverage_in_unit_interval(module):
+    an = analyze_module(module, TPU_V5E)
+    for cov in (an.coverage_before, an.coverage_after):
+        assert 0.0 <= cov.coverage <= 1.0
+    assert an.prune_stats.surviving_edges <= an.prune_stats.initial_edges
+
+
+@settings(max_examples=40, deadline=None)
+@given(instruction_streams())
+def test_makespan_dominates_occupancy(module):
+    profile = sample(module, TPU_V5E)
+    for rec in profile.records.values():
+        assert rec.total_samples <= profile.makespan_cycles + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(instruction_streams())
+def test_blame_lands_on_real_instructions(module):
+    an = analyze_module(module, TPU_V5E)
+    for q, cycles in an.blame.top_root_causes(100):
+        assert cycles >= 0
+        assert module.find(q) is not None
+
+
+# -- parser round-trip property ---------------------------------------------------
+
+@st.composite
+def hlo_programs(draw):
+    """Synthesize valid HLO text with a random elementwise chain."""
+    n = draw(st.integers(1, 10))
+    dim = draw(st.sampled_from([16, 64, 256]))
+    lines = [f"  %p0 = f32[{dim}] parameter(0)"]
+    names = ["p0"]
+    for i in range(n):
+        op = draw(st.sampled_from(["add", "multiply", "subtract"]))
+        a = draw(st.sampled_from(names))
+        b = draw(st.sampled_from(names))
+        lines.append(f"  %v{i} = f32[{dim}] {op}(%{a}, %{b})")
+        names.append(f"v{i}")
+    lines.append(f"  ROOT %r = f32[{dim}] negate(%{names[-1]})")
+    body = "\n".join(lines)
+    return (f"HloModule prop_mod\n\nENTRY %main (p0: f32[{dim}]) -> "
+            f"f32[{dim}] {{\n{body}\n}}\n"), n, dim
+
+
+@settings(max_examples=40, deadline=None)
+@given(hlo_programs())
+def test_parser_roundtrip(case):
+    text, n, dim = case
+    mod = parse_hlo(text)
+    entry = mod.entry_computation
+    # parameter + n ops + root
+    assert len(entry.instructions) == n + 2
+    assert entry.root is not None and entry.root.opcode == "negate"
+    for instr in entry.instructions:
+        if instr.op_class is OpClass.COMPUTE:
+            assert instr.shape.dims == (dim,)
+    # flops: 1 per element per elementwise op (negate included)
+    assert mod.total_flops() == pytest.approx((n + 1) * dim)
+
+
+@settings(max_examples=20, deadline=None)
+@given(hlo_programs())
+def test_graph_edges_reference_program(case):
+    text, n, dim = case
+    mod = parse_hlo(text)
+    graph = build_dependency_graph(mod, TPU_V5E)
+    for e in graph.edges:
+        assert mod.find(e.producer) is not None
+        assert mod.find(e.consumer) is not None
