@@ -1,0 +1,23 @@
+# Test lanes.
+#
+#   make tier1   — the full tier-1 verify command (what CI and the release
+#                  gate run; includes the ~80s substrate train/serve loops)
+#   make quick   — tier-1 minus tests marked `slow` (substrate end-to-end
+#                  drivers); the faster inner-loop lane
+#   make bench   — the paper-table benchmark suite (not a test gate)
+
+PY := python
+PYTEST_FLAGS := -x -q
+
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: tier1 quick bench
+
+tier1:
+	$(PY) -m pytest $(PYTEST_FLAGS)
+
+quick:
+	$(PY) -m pytest $(PYTEST_FLAGS) -m "not slow"
+
+bench:
+	$(PY) -m benchmarks.run

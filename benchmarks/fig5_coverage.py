@@ -6,19 +6,24 @@ import csv
 import io
 from typing import List
 
-from repro.core import HARDWARE_MODELS
+from repro.core import get_backend, list_backends
 
 from .harness import analyze_variant
 from .workloads import build_suite
 
 
-def run(backends=("tpu_v5e", "tpu_v5p", "tpu_v4")) -> List[dict]:
+def run(backends=None) -> List[dict]:
+    """Defaults to every registered backend (3 TPU + NVIDIA/AMD/Intel-class),
+    so the coverage table spans genuinely different vendors like the paper's
+    21-cell figure."""
+    names = list(backends) if backends is not None \
+        else [b.name for b in list_backends()]
     rows: List[dict] = []
     suite = build_suite()
-    for hw_name in backends:
-        hw = HARDWARE_MODELS[hw_name]
+    for hw_name in names:
+        backend = get_backend(hw_name)
         for w in suite:
-            res = analyze_variant(w.baseline, hw)
+            res = analyze_variant(w.baseline, backend)
             an = max(res.analyses, key=lambda a: a.estimated_step_seconds)
             rows.append({
                 "workload": w.name, "backend": hw_name,

@@ -1,10 +1,12 @@
 """Shared measurement harness for the paper-table benchmarks.
 
 A workload variant is a list of jitted stages (separate HloModules = separate
-kernel launches).  For each stage we compile, parse, and run LEO; the
-variant's model time is the sum of stage estimated times — so inter-kernel
-HBM traffic (stage outputs re-read by the next stage) is naturally priced,
-and kernel fusion shows up as real speedup.
+kernel launches).  For each stage we compile once, then hand the HLO text to
+a shared :class:`LeoSession` — the session's content-hash caches mean a stage
+reused across variants/backends is parsed once and its per-backend graphs
+are built once.  The variant's model time is the sum of stage estimated
+times — so inter-kernel HBM traffic (stage outputs re-read by the next
+stage) is naturally priced, and kernel fusion shows up as real speedup.
 """
 from __future__ import annotations
 
@@ -15,11 +17,11 @@ from typing import Dict, List, Optional, Tuple
 import jax
 
 from repro.core import (
-    HARDWARE_MODELS,
-    HardwareModel,
+    Backend,
+    BackendRegistry,
     LeoAnalysis,
-    analyze_module,
-    parse_hlo,
+    LeoSession,
+    resolve_backend,
 )
 from repro.core.report import Recommendation, recommendations
 
@@ -51,9 +53,14 @@ def _root_cause_label(an: LeoAnalysis) -> str:
 
 _HLO_CACHE: Dict[Tuple[int, int], str] = {}
 
+#: One session for the whole benchmark process: every table/figure shares
+#: the parse/graph/analysis caches.
+SESSION = LeoSession()
 
-def analyze_variant(stages, hw: HardwareModel,
-                    time_wall: bool = False) -> VariantResult:
+
+def analyze_variant(stages, hw, time_wall: bool = False) -> VariantResult:
+    """`hw` accepts a backend name, Backend, or bare HardwareModel."""
+    backend = resolve_backend(hw)
     analyses: List[LeoAnalysis] = []
     total = 0.0
     wall_us = 0.0
@@ -62,8 +69,8 @@ def analyze_variant(stages, hw: HardwareModel,
         key = (id(fn), id(args))
         if key not in _HLO_CACHE:
             _HLO_CACHE[key] = jax.jit(fn).lower(*args).compile().as_text()
-        module = parse_hlo(_HLO_CACHE[key])
-        an = analyze_module(module, hw)
+        an = SESSION.analyze(_HLO_CACHE[key], backend=backend)
+        module = an.module
         analyses.append(an)
         total += an.estimated_step_seconds
         root = module.entry_computation.root
@@ -89,7 +96,7 @@ def analyze_variant(stages, hw: HardwareModel,
             reason=f"{len(stages)} kernel launches round-trip "
                    f"{inter_bytes/2**20:.1f} MiB of intermediates through "
                    "HBM; fuse into one kernel.",
-            est_cycles=inter_bytes / hw.hbm_bw * hw.clock_hz))
+            est_cycles=inter_bytes / backend.hw.hbm_bw * backend.hw.clock_hz))
     return VariantResult(seconds=total, analyses=analyses, recs=recs,
                          root_cause=_root_cause_label(dominant),
                          wall_us=wall_us)

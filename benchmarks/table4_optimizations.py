@@ -11,17 +11,22 @@ import csv
 import io
 from typing import Dict, List
 
-from repro.core import HARDWARE_MODELS
+from repro.core import get_backend, list_backends
 
 from .harness import analyze_variant, geomean
 from .workloads import build_suite
 
 
-def run(backends=("tpu_v5e", "tpu_v5p", "tpu_v4")) -> List[dict]:
+def run(backends=None) -> List[dict]:
+    """Defaults to every registered backend — the TPU trio the seed shipped
+    plus the NVIDIA/AMD/Intel-class descriptors, matching the paper's
+    three-vendor Table IV protocol."""
+    names = list(backends) if backends is not None \
+        else [b.name for b in list_backends()]
     rows: List[dict] = []
     suite = build_suite()
-    for hw_name in backends:
-        hw = HARDWARE_MODELS[hw_name]
+    for hw_name in names:
+        hw = get_backend(hw_name)
         speedups = []
         for w in suite:
             base = analyze_variant(w.baseline, hw)

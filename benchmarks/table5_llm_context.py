@@ -24,7 +24,7 @@ import csv
 import io
 from typing import Dict, List
 
-from repro.core import HARDWARE_MODELS, OpClass
+from repro.core import OpClass, get_backend
 
 from .harness import analyze_variant, geomean
 from .workloads import build_suite
@@ -84,7 +84,7 @@ def _strategist_cls(workload, base_result) -> str:
 
 
 def run(hw_name: str = "tpu_v5e") -> Dict[str, dict]:
-    hw = HARDWARE_MODELS[hw_name]
+    hw = get_backend(hw_name)
     suite = build_suite()
     per_level: Dict[str, dict] = {}
     rows = []

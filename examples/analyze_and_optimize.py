@@ -22,15 +22,17 @@ import jax.numpy as jnp
 def main():
     from benchmarks.harness import analyze_variant
     from benchmarks.workloads import _make_ltimes
-    from repro.core import TPU_V5E, analyze_module, from_function, EdgeKind
+    from repro.core import LeoSession, from_function, EdgeKind
+
+    session = LeoSession(default_backend="tpu_v5e")
 
     print("=== 1. XLA kernel: LTIMES (strided 3-tensor contraction) ===")
     w = _make_ltimes("LTIMES")
-    base = analyze_variant(w.baseline, TPU_V5E)
+    base = analyze_variant(w.baseline, "tpu_v5e")
     print(f"baseline: {base.seconds*1e3:.3f} ms  root={base.root_cause}")
     for r in base.recs[:2]:
         print(f"  LEO: [{r.action}] {r.reason[:80]}")
-    opt = analyze_variant(w.optimized, TPU_V5E)
+    opt = analyze_variant(w.optimized, "tpu_v5e")
     print(f"optimized: {opt.seconds*1e3:.3f} ms  "
           f"speedup {base.seconds/opt.seconds:.2f}x")
 
@@ -43,7 +45,7 @@ def main():
                      ("pipelined", rmsnorm_pipelined)):
         module = from_function(
             lambda a, b, f=fn: f(a, b, interpret=True), x, scale)
-        an = analyze_module(module, TPU_V5E)
+        an = session.analyze(module)
         wc = [e for e in an.graph.edges if e.kind is EdgeKind.MEM_WAITCNT]
         print(f"{name:>9s}: est {an.estimated_step_seconds*1e6:8.2f} us, "
               f"{len(wc)} mem_waitcnt edges "

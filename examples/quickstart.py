@@ -22,7 +22,7 @@ def main():
 
     # LEO on the compiled step: where would this program stall on a v5e?
     import jax
-    from repro.core import TPU_V5E, analyze_hlo
+    from repro.core import LeoSession
     from repro.configs import get_config, smoke_config
     from repro.launch.mesh import make_host_mesh
     from repro.launch.train import build
@@ -32,9 +32,12 @@ def main():
         cfg, state, _, pipeline, step_fn = build(
             "qwen2-0.5b", True, 8, 64, mesh)
         compiled = step_fn.lower(state, pipeline.device_batch(0)).compile()
-    an = analyze_hlo(compiled.as_text(), hw=TPU_V5E)
+    session = LeoSession()
+    an = session.analyze(compiled.as_text(), backend="tpu_v5e")
     print("\n=== LEO analysis of the compiled train step ===")
     print(an.summary())
+    print("per-pass timing: " + ", ".join(
+        f"{name}={secs*1e3:.1f}ms" for name, secs in an.pass_seconds.items()))
     if an.chains:
         print("\ntop dependency chain:")
         print(an.chains[0].describe())

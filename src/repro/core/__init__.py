@@ -1,16 +1,53 @@
 """LEO core: cross-backend stall root-cause analysis via backward slicing.
 
-Public API:
+The public API has three layers (see ``docs/api.md`` for a tour):
 
-    from repro.core import analyze_hlo, analyze_module, cross_backend_analyze
-    from repro.core import from_function            # jaxpr/Pallas front-end
-    from repro.core import compute_roofline, TPU_V5E
+**Sessions** — the cached facade most callers want.  Parses each HLO text
+once (content-hash cache), builds each (module, backend) dependency graph
+once, and memoizes whole analyses::
+
+    from repro.core import LeoSession
+    session = LeoSession()
+    an = session.analyze(hlo_text, backend="tpu_v5e")      # LeoAnalysis
+    per_vendor = session.compare_backends(hlo_text)        # parses ONCE
+
+**Backends** — a pluggable registry of vendor descriptors (hardware model +
+native stall taxonomy + sync-semantics knobs).  Six ship by default: three
+TPU generations and NVIDIA/AMD/Intel-class parts; third parties add more
+without touching core files::
+
+    from repro.core import Backend, get_backend, list_backends, register_backend
+    register_backend(Backend(name="my_asic", vendor="acme", hw=..., ...))
+
+**Pipeline** — the named, reorderable analysis passes behind every entry
+point (sample -> depgraph -> coverage -> sync_edges -> prune -> blame ->
+chains -> cct).  Derive variants to insert/remove/replace passes::
+
+    from repro.core import default_pipeline
+    pipe = default_pipeline().without("cct")
+    ctx = pipe.run(module, "nvidia_gh200")     # raw AnalysisContext
+    # (pipe.analyze() needs every LeoAnalysis artifact, so trimmed
+    #  pipelines are consumed via run(); the full default supports both)
+
+Legacy one-shot helpers (``analyze_hlo`` / ``analyze_module`` /
+``cross_backend_analyze``) remain as thin shims over the same pipeline.
 """
 from .analyzer import (
     LeoAnalysis,
     analyze_hlo,
     analyze_module,
     cross_backend_analyze,
+)
+from .backends import (
+    Backend,
+    BackendRegistry,
+    REGISTRY,
+    SyncSemantics,
+    UnknownBackendError,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve_backend,
 )
 from .blame import BlameResult, attribute_blame
 from .cct import build_cct, format_hot_path
@@ -41,6 +78,15 @@ from .isa import (
     SyncKind,
 )
 from .jaxpr_frontend import from_function, from_jaxpr
+from .passes import (
+    AnalysisContext,
+    AnalysisPass,
+    DEFAULT_PIPELINE,
+    IncompletePipelineError,
+    Pipeline,
+    PipelineOrderError,
+    default_pipeline,
+)
 from .pruning import prune
 from .report import (
     diagnostic_context,
@@ -50,11 +96,24 @@ from .report import (
 )
 from .roofline import RooflineReport, compute_roofline
 from .sampler import StallProfile, VirtualSampler, sample
+from .session import LeoSession, SessionStats
 from .slicing import StallChain, top_chains
 from .sync_trace import add_sync_edges
 
 __all__ = [
+    # session facade
+    "LeoSession", "SessionStats",
+    # backend registry
+    "Backend", "BackendRegistry", "REGISTRY", "SyncSemantics",
+    "UnknownBackendError", "get_backend", "list_backends",
+    "register_backend", "resolve_backend",
+    # pass pipeline
+    "AnalysisContext", "AnalysisPass", "DEFAULT_PIPELINE",
+    "IncompletePipelineError", "Pipeline", "PipelineOrderError",
+    "default_pipeline",
+    # legacy shims + result object
     "LeoAnalysis", "analyze_hlo", "analyze_module", "cross_backend_analyze",
+    # phase primitives
     "BlameResult", "attribute_blame", "build_cct", "format_hot_path",
     "collective_operand_bytes", "collective_summary", "total_collective_bytes",
     "single_dependency_coverage", "DependencyGraph", "Edge",

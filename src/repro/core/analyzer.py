@@ -1,110 +1,48 @@
-"""LEO end-to-end pipeline (paper §III-A's 5-phase workflow).
+"""Legacy entry points — thin shims over the composable pass pipeline.
 
-  1. Data collection   — HLO text (the "disassembly") + virtual PC sampling
-                         (or an externally supplied measured profile).
-  2. Binary analysis   — parse computations/instructions, classify opcodes,
-                         recover source attribution from metadata.
-  3. Dependency graph  — CCT dependency graph from SSA/region dataflow,
-                         extended with synchronization edges (§III-E).
-  4. Four-stage pruning— opcode / barrier / latency / execution (§III-C).
-  5. Blame attribution — inverse-distance four-factor weighting (§III-D).
+The seed's monolithic 5-phase ``analyze_module`` now lives as named,
+reorderable passes in ``repro.core.passes`` (sample -> depgraph ->
+coverage -> sync_edges -> prune -> blame -> chains -> cct), with backends in
+``repro.core.backends`` and the cached facade in ``repro.core.session``.
 
-`analyze_hlo` is the main entry; `LeoAnalysis` carries every intermediate so
-benchmarks (coverage, context-format studies) can introspect the pipeline.
+These wrappers keep every seed call site working and produce results
+identical to the pipeline path (they *are* the pipeline path, minus the
+session caches):
+
+    analyze_hlo(text, hw=...)      == LeoSession().analyze(text, backend=...)
+    analyze_module(module, hw=...) == DEFAULT_PIPELINE.analyze(module, ...)
+    cross_backend_analyze(text)    == LeoSession().compare_backends(text)
+
+New code should prefer ``LeoSession`` (caching, batching, multi-backend
+fan-out) or a custom ``Pipeline`` (extra/removed/reordered passes).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
-from .blame import BlameResult, attribute_blame
-from .cct import CCTNode, build_cct
-from .coverage import CoverageReport, single_dependency_coverage
-from .depgraph import DependencyGraph, build_dependency_graph
+from .backends import BackendLike, resolve_backend
 from .hlo_parser import parse_hlo
 from .hwmodel import HardwareModel, TPU_V5E
 from .isa import Module
-from .pruning import PruneStats, prune
-from .sampler import StallProfile, sample
-from .slicing import StallChain, top_chains
-from .sync_trace import add_sync_edges
+from .passes import DEFAULT_PIPELINE, LeoAnalysis
+from .sampler import StallProfile
+
+__all__ = ["LeoAnalysis", "analyze_hlo", "analyze_module",
+           "cross_backend_analyze"]
 
 
-@dataclass
-class LeoAnalysis:
-    module: Module
-    hw: HardwareModel
-    profile: StallProfile
-    graph: DependencyGraph
-    prune_stats: PruneStats
-    blame: BlameResult
-    chains: List[StallChain]
-    coverage_before: CoverageReport
-    coverage_after: CoverageReport
-    cct: CCTNode
-    sync_edges_added: int = 0
-    analysis_seconds: float = 0.0
-
-    @property
-    def estimated_step_seconds(self) -> float:
-        return self.profile.makespan_seconds
-
-    def top_root_causes(self, n: int = 10):
-        return self.blame.top_root_causes(n)
-
-    def summary(self) -> str:
-        lines = [
-            f"LEO analysis [{self.hw.name}] module={self.module.name}",
-            f"  instructions={sum(len(c.instructions) for c in self.module.computations.values())}"
-            f" edges={self.prune_stats.initial_edges}"
-            f" (+{self.sync_edges_added} sync)"
-            f" -> {self.prune_stats.surviving_edges} after pruning "
-            f"{dict(self.prune_stats.pruned_by_stage)}",
-            f"  est. step time: {self.estimated_step_seconds*1e3:.3f} ms, "
-            f"total stall cycles: {self.profile.total_stall_cycles:,.0f}",
-            f"  single-dep coverage: {self.coverage_before.coverage:.0%} -> "
-            f"{self.coverage_after.coverage:.0%}",
-            "  top root causes:",
-        ]
-        for q, cycles in self.top_root_causes(5):
-            instr = self.module.find(q)
-            where = instr.op_name if instr is not None else ""
-            lines.append(f"    {cycles:14,.0f} cyc  {q}  [{where}]")
-        if self.blame.self_blame:
-            top_self = sorted(self.blame.self_blame, key=lambda s: -s.cycles)[:3]
-            lines.append("  self-blame:")
-            for s in top_self:
-                lines.append(f"    {s.cycles:14,.0f} cyc  {s.qualified}  "
-                             f"({s.subcategory})")
-        return "\n".join(lines)
-
-
-def analyze_module(module: Module, hw: HardwareModel = TPU_V5E,
+def analyze_module(module: Module, hw: BackendLike = TPU_V5E,
                    profile: Optional[StallProfile] = None,
                    n_chains: int = 5,
                    prune_unexecuted: bool = True) -> LeoAnalysis:
-    t0 = time.perf_counter()
-    if profile is None:
-        profile = sample(module, hw)                      # phase 1 (virtual)
-    graph = build_dependency_graph(module, hw)            # phase 3a
-    coverage_before = single_dependency_coverage(graph)
-    n_sync = add_sync_edges(graph)                        # phase 3b (§III-E)
-    prune_stats = prune(graph, profile, hw,
-                        prune_unexecuted=prune_unexecuted)  # phase 4
-    coverage_after = single_dependency_coverage(graph)
-    blame = attribute_blame(graph, profile, hw)           # phase 5
-    chains = top_chains(graph, profile, blame, n=n_chains)
-    cct = build_cct(module, profile)
-    return LeoAnalysis(
-        module=module, hw=hw, profile=profile, graph=graph,
-        prune_stats=prune_stats, blame=blame, chains=chains,
-        coverage_before=coverage_before, coverage_after=coverage_after,
-        cct=cct, sync_edges_added=n_sync,
-        analysis_seconds=time.perf_counter() - t0)
+    """Single-module analysis on one backend (hw may be a HardwareModel,
+    a registered backend name, or a Backend descriptor)."""
+    return DEFAULT_PIPELINE.analyze(module, resolve_backend(hw),
+                                    profile=profile, n_chains=n_chains,
+                                    prune_unexecuted=prune_unexecuted)
 
 
-def analyze_hlo(hlo_text: str, hw: HardwareModel = TPU_V5E,
+def analyze_hlo(hlo_text: str, hw: BackendLike = TPU_V5E,
                 hints: Optional[dict] = None,
                 **kwargs) -> LeoAnalysis:
     module = parse_hlo(hlo_text, hints=hints)
@@ -112,16 +50,16 @@ def analyze_hlo(hlo_text: str, hw: HardwareModel = TPU_V5E,
 
 
 def cross_backend_analyze(hlo_text: str,
-                          hw_models: Optional[List[HardwareModel]] = None,
+                          hw_models: Optional[Sequence[BackendLike]] = None,
                           hints: Optional[dict] = None
                           ) -> Dict[str, LeoAnalysis]:
     """Observation-1 driver: same program, every backend model.
 
-    Returns per-backend analyses so callers can diff dominant bottlenecks —
-    the paper's "the same kernel exhibits fundamentally different bottlenecks
-    across architectures" experiment.
+    Defaults to every *registered* backend (3 TPU generations plus the
+    NVIDIA/AMD/Intel-class descriptors), so the divergence the paper reports
+    across genuinely different vendors shows up out of the box.  Parses the
+    HLO exactly once via a transient session.
     """
-    from .hwmodel import HARDWARE_MODELS
-    models = hw_models or list(HARDWARE_MODELS.values())
-    module = parse_hlo(hlo_text, hints=hints)
-    return {hw.name: analyze_module(module, hw) for hw in models}
+    from .session import LeoSession
+    session = LeoSession(backends=hw_models, hints=hints)
+    return session.compare_backends(hlo_text)

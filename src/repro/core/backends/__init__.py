@@ -1,0 +1,180 @@
+"""Pluggable cross-vendor backend registry (paper §II / Observation 1).
+
+A :class:`Backend` bundles everything LEO needs to analyze a program *as if*
+it ran on one vendor's part:
+
+  * an analytical :class:`~repro.core.hwmodel.HardwareModel` (roofline and
+    latency constants — the per-vendor FLOP:HBM:interconnect ratios that make
+    the same kernel bottleneck differently per platform);
+  * a *stall-class taxonomy*: the mapping from LEO's unified
+    :class:`~repro.core.isa.StallClass` buckets back to the vendor-native
+    profiler counter names (CUPTI / rocprofiler / Level Zero / TPU xplane),
+    so reports can speak each vendor's language;
+  * :class:`SyncSemantics` knobs describing which §III-E synchronization
+    mechanisms the vendor's ISA exposes (named barriers, waitcnt counters,
+    SWSB-style tokens) and how collectives launch.
+
+Backends register into a process-global :class:`BackendRegistry`; third
+parties add vendors with :func:`register_backend` without touching core
+files.  Six descriptors ship by default — three TPU generations (the seed's
+models) plus NVIDIA-, AMD- and Intel-class parts — so
+``LeoSession.compare_backends`` exercises genuinely divergent vendors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Mapping, Optional, Tuple, Union
+
+from ..hwmodel import HardwareModel
+from ..isa import StallClass, SyncKind
+
+
+@dataclass(frozen=True)
+class SyncSemantics:
+    """Vendor synchronization-mechanism knobs (paper §III-E).
+
+    ``mechanisms`` lists which edge-producing sync styles the backend's ISA
+    exposes; the counts parameterize how many independent hardware resources
+    back each style (NVIDIA's B1-B6 named barriers, AMD's vmcnt/lgkmcnt
+    counters, Intel's SWSB scoreboard IDs).  ``async_collectives`` marks
+    whether collective latency is exposed at the *consumer* (async launch)
+    or blocks the issuing stream.
+    """
+
+    mechanisms: Tuple[SyncKind, ...] = (SyncKind.BARRIER, SyncKind.WAITCNT,
+                                        SyncKind.TOKEN)
+    barrier_slots: int = 6        # named-barrier resources (NVIDIA: B1..B6)
+    waitcnt_counters: int = 2     # outstanding-op counters (AMD: vmcnt/lgkmcnt)
+    swsb_tokens: int = 16         # scoreboard token IDs (Intel SWSB: $0..$15)
+    async_collectives: bool = True
+
+
+@dataclass(frozen=True)
+class Backend:
+    """One vendor/part descriptor: hardware model + taxonomy + sync knobs."""
+
+    name: str
+    vendor: str                               # "google" | "nvidia" | ...
+    hw: HardwareModel
+    stall_taxonomy: Mapping[StallClass, str]  # unified -> native counter name
+    sync: SyncSemantics = SyncSemantics()
+    description: str = ""
+
+    def native_stall_name(self, cls: StallClass) -> str:
+        """Vendor-native profiler name for a unified stall class."""
+        return self.stall_taxonomy.get(cls, cls.value)
+
+    def taxonomy_table(self) -> Dict[str, str]:
+        return {cls.value: name for cls, name in self.stall_taxonomy.items()}
+
+
+class UnknownBackendError(KeyError):
+    """Raised for lookups of unregistered backend names."""
+
+    def __init__(self, name: str, known: List[str]):
+        super().__init__(
+            f"unknown backend {name!r}; registered: {sorted(known)}")
+        self.name = name
+        self.known = sorted(known)
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep it readable
+        return self.args[0]
+
+
+class BackendRegistry:
+    """Name -> :class:`Backend` mapping with third-party registration."""
+
+    def __init__(self) -> None:
+        self._backends: Dict[str, Backend] = {}
+
+    def register(self, backend: Backend, *, overwrite: bool = False) -> Backend:
+        if not overwrite and backend.name in self._backends:
+            raise ValueError(
+                f"backend {backend.name!r} already registered; pass "
+                f"overwrite=True to replace it")
+        self._backends[backend.name] = backend
+        return backend
+
+    def unregister(self, name: str) -> None:
+        self._backends.pop(name, None)
+
+    def get(self, name: str) -> Backend:
+        try:
+            return self._backends[name]
+        except KeyError:
+            raise UnknownBackendError(name, list(self._backends)) from None
+
+    def names(self) -> List[str]:
+        return list(self._backends)
+
+    def by_vendor(self, vendor: str) -> List[Backend]:
+        return [b for b in self._backends.values() if b.vendor == vendor]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._backends
+
+    def __iter__(self) -> Iterator[Backend]:
+        return iter(self._backends.values())
+
+    def __len__(self) -> int:
+        return len(self._backends)
+
+
+#: Process-global default registry; `register_backend` and `LeoSession`
+#: operate on this unless handed an explicit registry.
+REGISTRY = BackendRegistry()
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    return REGISTRY.register(backend, overwrite=overwrite)
+
+
+def get_backend(name: str) -> Backend:
+    return REGISTRY.get(name)
+
+
+def list_backends() -> List[Backend]:
+    return list(REGISTRY)
+
+
+BackendLike = Union[Backend, HardwareModel, str]
+
+
+def resolve_backend(spec: BackendLike) -> Backend:
+    """Coerce a backend name / Backend / bare HardwareModel to a Backend.
+
+    Bare hardware models (the legacy ``hw=TPU_V5E`` calling convention)
+    resolve to their registered backend when one carries the same model,
+    otherwise wrap into an anonymous descriptor with the generic taxonomy —
+    legacy callers keep working without registering anything.
+    """
+    if isinstance(spec, Backend):
+        return spec
+    if isinstance(spec, str):
+        return get_backend(spec)
+    if isinstance(spec, HardwareModel):
+        for backend in REGISTRY:
+            if backend.hw is spec or backend.hw == spec:
+                return backend
+        return Backend(name=spec.name, vendor="custom", hw=spec,
+                       stall_taxonomy=GENERIC_TAXONOMY,
+                       description="ad-hoc backend wrapping a bare "
+                                   "HardwareModel")
+    raise TypeError(f"cannot resolve backend from {type(spec).__name__}")
+
+
+#: Fallback taxonomy: unified names map to themselves.
+GENERIC_TAXONOMY: Mapping[StallClass, str] = {
+    cls: cls.value for cls in StallClass
+}
+
+
+# -- default registrations ---------------------------------------------------
+# Imported last: the vendor modules call register_backend() at import time.
+from . import amd, intel, nvidia, tpu  # noqa: E402,F401  (registration side effect)
+
+__all__ = [
+    "Backend", "BackendRegistry", "BackendLike", "SyncSemantics",
+    "UnknownBackendError", "REGISTRY", "GENERIC_TAXONOMY",
+    "register_backend", "get_backend", "list_backends", "resolve_backend",
+]

@@ -1,0 +1,56 @@
+"""AMD-class backend descriptor (MI300A-class constants).
+
+Class estimates from public specs: CDNA3 bf16 matrix FLOPs, 5.3 TB/s HBM3,
+Infinity Fabric links.  Taxonomy follows rocprofiler / GCN ISA vocabulary;
+the signature sync mechanism is ``s_waitcnt`` counter draining, which LEO's
+waitcnt tracing reproduces exactly (§III-E oldest-(M-N) rule).
+"""
+from __future__ import annotations
+
+from ..hwmodel import HardwareModel
+from ..isa import StallClass, SyncKind
+from . import Backend, SyncSemantics, register_backend
+
+AMD_MI300A = HardwareModel(
+    name="amd_mi300a",
+    peak_flops_bf16=980e12,          # CDNA3 matrix-core bf16
+    peak_flops_f32=122e12,           # vector fp32
+    hbm_bw=5300e9,                   # HBM3, widest in class
+    hbm_bytes=128 * 2**30,
+    ici_bw_per_link=64e9,            # Infinity Fabric per link
+    ici_links=8,
+    vmem_bytes=64 * 2**20,           # LDS + L2-resident tiles
+    clock_hz=2100e6,
+    issue_overhead_cycles=1.0,
+    dma_setup_cycles=16.0,
+    collective_setup_cycles=12000.0,  # RCCL launch cost @ 2.1 GHz
+    mxu_pipe_depth_cycles=16.0,       # MFMA result latency
+    vpu_pipe_depth_cycles=8.0,        # VALU forwarding latency
+)
+
+# rocprofiler / GCN wait vocabulary.
+ROCM_TAXONOMY = {
+    StallClass.NONE: "issued",
+    StallClass.MEM_DEP: "s_waitcnt_vmcnt",
+    StallClass.EXEC_DEP: "s_waitcnt_lgkmcnt",
+    StallClass.SYNC_WAIT: "s_barrier",
+    StallClass.COLLECTIVE_WAIT: "xgmi_wait",
+    StallClass.FETCH: "instruction_fetch",
+    StallClass.PIPE_BUSY: "mfma_pipe_busy",
+    StallClass.NOT_SELECTED: "arbiter_not_selected",
+    StallClass.SELF: "other",
+}
+
+AMD_SYNC = SyncSemantics(
+    mechanisms=(SyncKind.WAITCNT, SyncKind.BARRIER),
+    barrier_slots=1,          # single workgroup s_barrier
+    waitcnt_counters=3,       # vmcnt / lgkmcnt / expcnt
+    swsb_tokens=0,
+    async_collectives=True,
+)
+
+AMD_MI300A_BACKEND = register_backend(Backend(
+    name="amd_mi300a", vendor="amd", hw=AMD_MI300A,
+    stall_taxonomy=ROCM_TAXONOMY, sync=AMD_SYNC,
+    description="MI300A-class: widest HBM (5.3 TB/s) per FLOP — memory-"
+                "bound kernels flip compute-bound here first."))

@@ -1,0 +1,58 @@
+"""Intel-class backend descriptor (Ponte Vecchio / Max 1550-class constants).
+
+Class estimates: XMX bf16 FLOPs, HBM2e bandwidth, Xe-Link fabric (many thin
+links — the weakest per-link interconnect of the three vendors, which is
+what makes collective-heavy programs diverge here, paper Observation 1).
+Taxonomy follows Level Zero / GTPin vocabulary; synchronization is SWSB
+software scoreboarding — the token-threading mechanism LEO traces (§III-E).
+"""
+from __future__ import annotations
+
+from ..hwmodel import HardwareModel
+from ..isa import StallClass, SyncKind
+from . import Backend, SyncSemantics, register_backend
+
+INTEL_PVC = HardwareModel(
+    name="intel_pvc",
+    peak_flops_bf16=839e12,          # XMX bf16, Max 1550-class
+    peak_flops_f32=52e12,            # vector fp32
+    hbm_bw=3280e9,                   # HBM2e
+    hbm_bytes=128 * 2**30,
+    ici_bw_per_link=26.5e9,          # Xe-Link per link — thin
+    ici_links=16,
+    vmem_bytes=128 * 2**20,          # large Rambo/L2 cache
+    clock_hz=1600e6,
+    issue_overhead_cycles=1.0,
+    dma_setup_cycles=24.0,
+    collective_setup_cycles=16000.0,  # oneCCL launch @ 1.6 GHz
+    mxu_pipe_depth_cycles=8.0,        # XMX systolic depth (8-deep)
+    vpu_pipe_depth_cycles=10.0,
+)
+
+# Level Zero / GTPin stall vocabulary (SWSB scoreboard waits).
+LEVELZERO_TAXONOMY = {
+    StallClass.NONE: "active",
+    StallClass.MEM_DEP: "sbid_wait_load",
+    StallClass.EXEC_DEP: "swsb_dist_wait",
+    StallClass.SYNC_WAIT: "sync_func_wait",
+    StallClass.COLLECTIVE_WAIT: "xelink_wait",
+    StallClass.FETCH: "instruction_fetch",
+    StallClass.PIPE_BUSY: "pipe_stall",
+    StallClass.NOT_SELECTED: "thread_not_selected",
+    StallClass.SELF: "other",
+}
+
+INTEL_SYNC = SyncSemantics(
+    mechanisms=(SyncKind.TOKEN, SyncKind.BARRIER),
+    barrier_slots=32,         # named barriers per subslice
+    waitcnt_counters=0,
+    swsb_tokens=16,           # SWSB scoreboard IDs $0..$15
+    async_collectives=False,  # oneCCL collectives block the queue
+)
+
+INTEL_PVC_BACKEND = register_backend(Backend(
+    name="intel_pvc", vendor="intel", hw=INTEL_PVC,
+    stall_taxonomy=LEVELZERO_TAXONOMY, sync=INTEL_SYNC,
+    description="PVC-class: thin per-link Xe-Link fabric and slow "
+                "collective launch — communication-heavy programs "
+                "bottleneck here first."))

@@ -1,0 +1,57 @@
+"""NVIDIA-class backend descriptor (GH200/H100-class constants).
+
+Numbers are public-spec class estimates, not measurements: dense bf16 tensor
+FLOPs, HBM3 bandwidth, NVLink4 (18 links x 50 GB/s per direction).  The
+taxonomy is CUPTI PC-sampling's stall-reason vocabulary (the paper's primary
+platform), and the sync semantics are named barriers B1-B6 — the mechanism
+LEO's barrier tracing models (§III-E).
+"""
+from __future__ import annotations
+
+from ..hwmodel import HardwareModel
+from ..isa import StallClass, SyncKind
+from . import Backend, SyncSemantics, register_backend
+
+NVIDIA_GH200 = HardwareModel(
+    name="nvidia_gh200",
+    peak_flops_bf16=989e12,          # dense tensor-core bf16
+    peak_flops_f32=67e12,            # CUDA-core fp32 vector path
+    hbm_bw=4000e9,                   # HBM3e, GH200-class
+    hbm_bytes=96 * 2**30,
+    ici_bw_per_link=50e9,            # NVLink4 per link per direction
+    ici_links=18,
+    vmem_bytes=50 * 2**20,           # L2-resident working set
+    clock_hz=1830e6,
+    issue_overhead_cycles=1.0,
+    dma_setup_cycles=20.0,           # TMA/cp.async launch
+    collective_setup_cycles=9000.0,  # NCCL kernel launch ~5us @ 1.8 GHz
+    mxu_pipe_depth_cycles=32.0,      # tensor-core result latency
+    vpu_pipe_depth_cycles=24.0,      # dependent-issue ALU latency
+)
+
+# CUPTI PC-sampling stall reasons (§II-D table).
+CUPTI_TAXONOMY = {
+    StallClass.NONE: "selected",
+    StallClass.MEM_DEP: "long_scoreboard",
+    StallClass.EXEC_DEP: "short_scoreboard",
+    StallClass.SYNC_WAIT: "barrier",
+    StallClass.COLLECTIVE_WAIT: "membar",
+    StallClass.FETCH: "no_instruction",
+    StallClass.PIPE_BUSY: "math_pipe_throttle",
+    StallClass.NOT_SELECTED: "not_selected",
+    StallClass.SELF: "misc",
+}
+
+NVIDIA_SYNC = SyncSemantics(
+    mechanisms=(SyncKind.BARRIER, SyncKind.TOKEN),
+    barrier_slots=6,          # named barriers B1..B6
+    waitcnt_counters=0,       # no s_waitcnt-style counters
+    swsb_tokens=0,
+    async_collectives=True,   # NCCL on copy engines / SM subsets
+)
+
+NVIDIA_GH200_BACKEND = register_backend(Backend(
+    name="nvidia_gh200", vendor="nvidia", hw=NVIDIA_GH200,
+    stall_taxonomy=CUPTI_TAXONOMY, sync=NVIDIA_SYNC,
+    description="GH200-class: dominant tensor FLOPs, mid-pack HBM ratio, "
+                "fat NVLink — compute-rich, memory-ratio-poor."))

@@ -1,0 +1,50 @@
+"""TPU backend descriptors (the seed's three hardware models).
+
+The TPU stall taxonomy speaks xplane/trace-viewer vocabulary: stalls show up
+as wait-time buckets on the TensorCore timeline rather than warp-scheduler
+counters.
+"""
+from __future__ import annotations
+
+from ..hwmodel import TPU_V4, TPU_V5E, TPU_V5P
+from ..isa import StallClass, SyncKind
+from . import Backend, SyncSemantics, register_backend
+
+TPU_TAXONOMY = {
+    StallClass.NONE: "idle",
+    StallClass.MEM_DEP: "hbm_wait",
+    StallClass.EXEC_DEP: "scalar_pipeline_wait",
+    StallClass.SYNC_WAIT: "dma_semaphore_wait",
+    StallClass.COLLECTIVE_WAIT: "ici_wait",
+    StallClass.FETCH: "program_fetch",
+    StallClass.PIPE_BUSY: "mxu_occupied",
+    StallClass.NOT_SELECTED: "not_selected",
+    StallClass.SELF: "self",
+}
+
+# TPUs expose all three §III-E mechanisms through XLA/Pallas: async start/
+# done pairs, DMA semaphores, and token threading.
+TPU_SYNC = SyncSemantics(
+    mechanisms=(SyncKind.BARRIER, SyncKind.WAITCNT, SyncKind.TOKEN),
+    barrier_slots=32,        # async copy/collective contexts
+    waitcnt_counters=16,     # Pallas DMA semaphores
+    swsb_tokens=8,           # XLA token values in flight
+    async_collectives=True,
+)
+
+TPU_V5E_BACKEND = register_backend(Backend(
+    name="tpu_v5e", vendor="google", hw=TPU_V5E,
+    stall_taxonomy=TPU_TAXONOMY, sync=TPU_SYNC,
+    description="TPU v5e: cost-optimized, narrow HBM (819 GB/s), 4 ICI "
+                "links — collective- and memory-sensitive."))
+
+TPU_V5P_BACKEND = register_backend(Backend(
+    name="tpu_v5p", vendor="google", hw=TPU_V5P,
+    stall_taxonomy=TPU_TAXONOMY, sync=TPU_SYNC,
+    description="TPU v5p: training flagship, fat HBM (2.8 TB/s) + 6 ICI "
+                "links — the same kernel often flips compute-bound here."))
+
+TPU_V4_BACKEND = register_backend(Backend(
+    name="tpu_v4", vendor="google", hw=TPU_V4,
+    stall_taxonomy=TPU_TAXONOMY, sync=TPU_SYNC,
+    description="TPU v4: balanced mid-generation part."))

@@ -22,7 +22,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from .analyzer import LeoAnalysis
+from .passes import LeoAnalysis
 from .isa import EdgeKind, Instruction, OpClass, StallClass
 
 
@@ -145,20 +145,35 @@ def structured_report(analysis: LeoAnalysis, max_chains: int = 5) -> dict:
                 "source": l.source,
             } for l in chain.links],
         })
+    backend = analysis.backend
     stalls = []
     for rec in analysis.profile.top_stalled(10):
         instr = analysis.module.find(rec.qualified)
-        stalls.append({
+        entry = {
             "instruction": rec.qualified,
             "opcode": instr.opcode if instr else "?",
             "scope": instr.op_name if instr else "",
             "latency_samples": rec.latency_samples,
             "total_samples": rec.total_samples,
             "breakdown": {k.value: v for k, v in rec.stall_breakdown.items()},
-        })
-    return {
+        }
+        if backend is not None:
+            # the same counters in the vendor profiler's own vocabulary
+            # (CUPTI / rocprofiler / Level Zero / xplane), for agents that
+            # cross-check against native tool output
+            entry["native_breakdown"] = {
+                backend.native_stall_name(k): v
+                for k, v in rec.stall_breakdown.items()}
+        stalls.append(entry)
+    report_head = {
         "backend": analysis.hw.name,
         "module": analysis.module.name,
+    }
+    if backend is not None:
+        report_head["vendor"] = backend.vendor
+        report_head["stall_taxonomy"] = backend.taxonomy_table()
+    return {
+        **report_head,
         "estimated_step_seconds": analysis.estimated_step_seconds,
         "total_stall_cycles": analysis.profile.total_stall_cycles,
         "single_dependency_coverage": {

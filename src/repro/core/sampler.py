@@ -124,9 +124,15 @@ _SKIP_KINDS = ("fusion", "reduce", "loop_cond")
 
 
 class VirtualSampler:
-    def __init__(self, module: Module, hw: HardwareModel):
+    def __init__(self, module: Module, hw: HardwareModel, sync=None):
         self.module = module
         self.hw = hw
+        # Optional backend SyncSemantics (duck-typed to avoid an import
+        # cycle with repro.core.backends).  Only the async_collectives knob
+        # is behavioral today: vendors whose collectives block the issuing
+        # queue (e.g. queue-ordered oneCCL) pay the transfer latency at
+        # *issue* instead of at the consumer.
+        self.sync = sync
 
     # -- public ---------------------------------------------------------------
 
@@ -224,6 +230,9 @@ class VirtualSampler:
         if instr.opcode in ("call", "conditional"):
             return self._simulate_called(instr, env, profile, issue_at, mult,
                                          depth)
+        if instr.op_class is OpClass.COLLECTIVE and self.sync is not None \
+                and not getattr(self.sync, "async_collectives", True):
+            return self.hw.latency_cycles(instr)
         return self.hw.issue_cycles(instr)
 
     def _latency_cycles(self, instr: Instruction, env, profile, issue_at,

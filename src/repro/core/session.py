@@ -1,0 +1,229 @@
+"""`LeoSession`: the cached facade over the pass pipeline.
+
+A session owns three content-addressed caches so production callers (the
+benchmark harness, a profiling service fanning one trace out to N vendor
+models) never re-do work:
+
+  * **parse cache** — HLO text (sha256 + hints) -> parsed ``Module``;
+  * **graph cache** — (module, backend) -> pristine dependency graph;
+    pipeline passes mutate graphs (sync edges, prune marks), so the cache
+    stores an untouched copy and hands out cheap structural clones that
+    share ``Instruction``/``PathInfo`` objects but own their ``Edge``s;
+  * **analysis cache** — (module, backend, options) -> ``LeoAnalysis``.
+
+``session.stats`` exposes hit/miss counters (asserted by the tier-1 parse-
+once test).  ``compare_backends`` is the Observation-1 driver: one parse,
+one graph build per backend, N divergent analyses.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from .backends import Backend, BackendLike, list_backends, resolve_backend
+from .depgraph import DependencyGraph, Edge, build_dependency_graph
+from .hlo_parser import parse_hlo
+from .isa import Module
+from .passes import DEFAULT_PIPELINE, LeoAnalysis, Pipeline
+from .sampler import StallProfile
+
+
+@dataclass
+class SessionStats:
+    parse_calls: int = 0
+    parse_misses: int = 0
+    graph_requests: int = 0
+    graph_builds: int = 0
+    analyze_calls: int = 0
+    analyze_misses: int = 0
+
+    @property
+    def parse_hits(self) -> int:
+        return self.parse_calls - self.parse_misses
+
+    @property
+    def graph_hits(self) -> int:
+        return self.graph_requests - self.graph_builds
+
+    @property
+    def analyze_hits(self) -> int:
+        return self.analyze_calls - self.analyze_misses
+
+    def as_dict(self) -> Dict[str, int]:
+        return {
+            "parse_calls": self.parse_calls, "parse_hits": self.parse_hits,
+            "graph_requests": self.graph_requests,
+            "graph_hits": self.graph_hits,
+            "analyze_calls": self.analyze_calls,
+            "analyze_hits": self.analyze_hits,
+        }
+
+
+def _clone_graph(graph: DependencyGraph) -> DependencyGraph:
+    """Structural clone: shares the Module and per-edge PathInfo objects
+    (immutable), owns the Edge records and index lists (mutated by the
+    sync/prune passes)."""
+    clone = DependencyGraph(module=graph.module)
+    for e in graph.edges:
+        clone.add(Edge(producer=e.producer, consumer=e.consumer, kind=e.kind,
+                       paths=list(e.paths), pruned_by=e.pruned_by))
+    return clone
+
+
+class _SessionCache:
+    """The duck-typed ``ctx.cache`` object pipeline passes consult."""
+
+    def __init__(self, stats: SessionStats):
+        self.stats = stats
+        self._graphs: Dict[Tuple[str, str], DependencyGraph] = {}
+
+    def graph_for(self, module_key: str, module: Module,
+                  backend: Backend) -> DependencyGraph:
+        self.stats.graph_requests += 1
+        key = (module_key, backend.hw.name)
+        cached = self._graphs.get(key)
+        if cached is None:
+            self.stats.graph_builds += 1
+            cached = build_dependency_graph(module, backend.hw)
+            self._graphs[key] = _clone_graph(cached)  # keep a pristine copy
+            return cached
+        return _clone_graph(cached)
+
+    def clear(self) -> None:
+        self._graphs.clear()
+
+
+ModuleLike = Union[str, Module]
+
+
+class LeoSession:
+    """Cached, multi-backend entry point to LEO's analysis pipeline.
+
+    ::
+
+        session = LeoSession()
+        an = session.analyze(hlo_text, backend="tpu_v5e")
+        per_vendor = session.compare_backends(hlo_text)   # parses ONCE
+    """
+
+    def __init__(self, pipeline: Optional[Pipeline] = None,
+                 backends: Optional[Sequence[BackendLike]] = None,
+                 hints: Optional[dict] = None,
+                 default_backend: BackendLike = "tpu_v5e"):
+        self.pipeline = pipeline or DEFAULT_PIPELINE
+        # None = live view of the registry (backends registered after the
+        # session is constructed still show up in compare_backends).
+        self._backends: Optional[List[Backend]] = \
+            [resolve_backend(b) for b in backends] \
+            if backends is not None else None
+        self.hints = hints
+        self.default_backend = resolve_backend(default_backend)
+        self.stats = SessionStats()
+        self._modules: Dict[str, Module] = {}
+        self._module_keys: Dict[int, str] = {}   # id(Module) -> key
+        self._analyses: Dict[Tuple, LeoAnalysis] = {}
+        self._cache = _SessionCache(self.stats)
+
+    @property
+    def backends(self) -> List[Backend]:
+        return list(self._backends) if self._backends is not None \
+            else list_backends()
+
+    # -- parsing --------------------------------------------------------------
+
+    def module_key(self, hlo_text: str, hints: Optional[dict] = None) -> str:
+        h = hashlib.sha256(hlo_text.encode())
+        merged = {**(self.hints or {}), **(hints or {})}
+        h.update(repr(sorted(merged.items())).encode())
+        return h.hexdigest()
+
+    def parse(self, hlo_text: str, hints: Optional[dict] = None) -> Module:
+        """Content-hash cached `parse_hlo`."""
+        self.stats.parse_calls += 1
+        key = self.module_key(hlo_text, hints)
+        module = self._modules.get(key)
+        if module is None:
+            self.stats.parse_misses += 1
+            merged = {**(self.hints or {}), **(hints or {})}
+            module = parse_hlo(hlo_text, hints=merged or None)
+            self._modules[key] = module
+            self._module_keys[id(module)] = key
+        return module
+
+    def _resolve_module(self, program: ModuleLike,
+                        hints: Optional[dict]) -> Tuple[Module, str]:
+        if isinstance(program, Module):
+            # Directly-supplied modules are identity-keyed: the session did
+            # not build them and cannot content-hash them cheaply.  The
+            # module is retained in the cache so its id() cannot be recycled
+            # onto a different Module while the key mapping is live.
+            key = self._module_keys.get(id(program))
+            if key is None or self._modules.get(key) is not program:
+                key = f"module-id-{id(program)}-{len(self._modules)}"
+                self._module_keys[id(program)] = key
+                self._modules[key] = program
+            return program, key
+        return self.parse(program, hints), self.module_key(program, hints)
+
+    # -- analysis -------------------------------------------------------------
+
+    def analyze(self, program: ModuleLike, *,
+                backend: Optional[BackendLike] = None,
+                profile: Optional[StallProfile] = None,
+                hints: Optional[dict] = None,
+                n_chains: int = 5,
+                prune_unexecuted: bool = True) -> LeoAnalysis:
+        """Analyze one program (HLO text or pre-parsed Module) on one backend."""
+        self.stats.analyze_calls += 1
+        b = resolve_backend(backend) if backend is not None \
+            else self.default_backend
+        module, mkey = self._resolve_module(program, hints)
+        akey = (mkey, b.name, n_chains, prune_unexecuted)
+        if profile is None:
+            cached = self._analyses.get(akey)
+            if cached is not None:
+                return cached
+        self.stats.analyze_misses += 1
+        import time as _time
+        t0 = _time.perf_counter()
+        ctx = self.pipeline.run(module, b, profile=profile,
+                                cache=self._cache, module_key=mkey,
+                                n_chains=n_chains,
+                                prune_unexecuted=prune_unexecuted)
+        analysis = ctx.to_analysis(analysis_seconds=_time.perf_counter() - t0)
+        if profile is None:
+            self._analyses[akey] = analysis
+        return analysis
+
+    def analyze_batch(self, programs: Iterable[ModuleLike], *,
+                      backend: Optional[BackendLike] = None,
+                      **kwargs: Any) -> List[LeoAnalysis]:
+        """Fan a set of programs through the cache (e.g. one per pipeline
+        stage of a multi-kernel workload)."""
+        return [self.analyze(p, backend=backend, **kwargs) for p in programs]
+
+    def compare_backends(self, program: ModuleLike, *,
+                         backends: Optional[Sequence[BackendLike]] = None,
+                         hints: Optional[dict] = None,
+                         **kwargs: Any) -> Dict[str, LeoAnalysis]:
+        """Observation-1 driver: same program, every backend, parsed once."""
+        targets = [resolve_backend(b) for b in backends] \
+            if backends is not None else self.backends
+        return {b.name: self.analyze(program, backend=b, hints=hints,
+                                     **kwargs)
+                for b in targets}
+
+    # -- maintenance ----------------------------------------------------------
+
+    def clear_cache(self) -> None:
+        self._modules.clear()
+        self._module_keys.clear()
+        self._analyses.clear()
+        self._cache.clear()
+
+    def __repr__(self) -> str:
+        s = self.stats
+        return (f"LeoSession(backends={[b.name for b in self.backends]}, "
+                f"modules={len(self._modules)}, analyses={len(self._analyses)}, "
+                f"parse {s.parse_hits}/{s.parse_calls} hit)")

@@ -133,7 +133,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
              hw_name: str = "tpu_v5e", force: bool = False,
              model_flags: dict = None) -> dict:
     from ..configs import get_config, get_shape, model_flops, shapes_for
-    from ..core import analyze_module, get_hardware_model, parse_hlo
+    from ..core import analyze_module, get_backend, parse_hlo
     from ..core.report import structured_report
     from ..core.roofline import compute_roofline
     from .mesh import make_production_mesh
@@ -165,7 +165,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
         cost = compiled.cost_analysis()
         hlo = compiled.as_text()
         module = parse_hlo(hlo, hints={"total_devices": chips})
-        hw = get_hardware_model(hw_name)
+        hw = get_backend(hw_name).hw
         rl = compute_roofline(
             module, hw, chips=chips, label=label,
             model_flops=model_flops(cfg, shape),

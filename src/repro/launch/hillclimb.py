@@ -72,7 +72,7 @@ def run_variant(arch, shape_name, name, model_flags, opt_overrides,
                 mesh_kind, outdir, hw_name="tpu_v5e", analyze=True,
                 force=False):
     from ..configs import get_config, get_shape, model_flops
-    from ..core import analyze_module, get_hardware_model, parse_hlo
+    from ..core import analyze_module, get_backend, parse_hlo
     from ..core.report import structured_report
     from ..core.roofline import compute_roofline
     from ..models.flags import flags as flags_ctx
@@ -100,7 +100,7 @@ def run_variant(arch, shape_name, name, model_flags, opt_overrides,
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()
     module = parse_hlo(hlo, hints={"total_devices": chips})
-    hw = get_hardware_model(hw_name)
+    hw = get_backend(hw_name).hw
     rl = compute_roofline(module, hw, chips=chips, label=label,
                           model_flops=model_flops(cfg, shape),
                           cost_analysis=compiled.cost_analysis(),

@@ -22,10 +22,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def build(arch: str, smoke: bool, batch: int, seq: int, mesh,
-          microbatch: int = 1, grad_compression: bool = False):
+          microbatch: int = 1, grad_compression: bool = False,
+          steps: int = 0, lr: float = 0.0):
     from ..configs import get_config, smoke_config
     from ..data.pipeline import DataPipeline
     from ..data.synthetic import SyntheticConfig, SyntheticTokenDataset
+    from ..optim import AdamWConfig
     from ..parallel.sharding import ShardingRules
     from ..runtime.steps import TrainOptions, init_train_state, \
         make_train_step
@@ -54,10 +56,25 @@ def build(arch: str, smoke: bool, batch: int, seq: int, mesh,
         frontend=cfg.frontend))
     pipeline = DataPipeline(ds, batch, shardings=batch_sharding)
 
+    # The TrainOptions schedule defaults (100-step warmup over a 10k-step
+    # horizon) are production-run constants; a short run that never leaves
+    # warmup makes no measurable progress.  Scale the schedule to the run
+    # that was actually requested.
+    if steps > 0:
+        warmup = max(1, min(100, steps // 10))
+        total = steps
+    else:
+        warmup, total = 100, 10_000
     options = TrainOptions(remat="group", chunk=min(512, seq),
                            microbatch=microbatch,
-                           grad_compression=grad_compression)
-    step_fn = jax.jit(make_train_step(cfg, options=options),
+                           grad_compression=grad_compression,
+                           warmup_steps=warmup, total_steps=total)
+    # Smoke configs are tiny (d_model 64); the production 3e-4 moves them
+    # too slowly to beat per-batch loss noise inside a smoke-length run.
+    if lr <= 0.0:
+        lr = 3e-3 if smoke else AdamWConfig().lr
+    opt_cfg = AdamWConfig(lr=lr)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, options=options),
                       donate_argnums=(0,))
     return cfg, state, state_sh, pipeline, step_fn
 
@@ -70,6 +87,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.0,
+                    help="peak learning rate (0 = auto: 3e-3 smoke, "
+                         "3e-4 production)")
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=25)
@@ -86,7 +106,8 @@ def main(argv=None) -> dict:
         cfg, state, state_sh, pipeline, step_fn = build(
             args.arch, args.smoke, args.batch, args.seq, mesh,
             microbatch=args.microbatch,
-            grad_compression=args.grad_compression)
+            grad_compression=args.grad_compression,
+            steps=args.steps, lr=args.lr)
 
         manager = None
         start_step = 0
@@ -122,14 +143,15 @@ def main(argv=None) -> dict:
               f"({result['steps']} steps, {wall:.1f}s)")
 
         if args.analyze:
-            from ..core import TPU_V5E, analyze_hlo
+            from ..core import LeoSession
             from ..launch import specs as S
             lowered = jax.jit(step_fn.__wrapped__).lower(
                 jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                              state),
                 jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                              pipeline.device_batch(0)))
-            an = analyze_hlo(lowered.compile().as_text(), hw=TPU_V5E)
+            an = LeoSession().analyze(lowered.compile().as_text(),
+                                      backend="tpu_v5e")
             print(an.summary())
             result["leo_step_seconds"] = an.estimated_step_seconds
         return result

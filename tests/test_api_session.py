@@ -1,0 +1,298 @@
+"""Tests for the redesigned public API: backend registry, pass pipeline,
+and the cached `LeoSession` facade (plus legacy-shim parity)."""
+import json
+
+import pytest
+
+from repro.core import (
+    Backend,
+    BackendRegistry,
+    DEFAULT_PIPELINE,
+    LeoSession,
+    Pipeline,
+    PipelineOrderError,
+    StallClass,
+    SyncSemantics,
+    TPU_V5E,
+    UnknownBackendError,
+    analyze_hlo,
+    analyze_module,
+    cross_backend_analyze,
+    default_pipeline,
+    get_backend,
+    list_backends,
+    parse_hlo,
+    register_backend,
+    resolve_backend,
+    structured_report,
+)
+from repro.core.backends import GENERIC_TAXONOMY, REGISTRY
+from repro.core.passes import AnalysisPass, CCTPass
+
+
+def _stable_report(analysis) -> str:
+    """Canonical JSON of the deterministic report fields (timings excluded —
+    structured_report carries none)."""
+    return json.dumps(structured_report(analysis), sort_keys=True)
+
+
+# --------------------------------------------------------------------------
+# Backend registry.
+# --------------------------------------------------------------------------
+
+class TestBackendRegistry:
+    def test_six_default_backends(self):
+        names = {b.name for b in list_backends()}
+        assert {"tpu_v5e", "tpu_v5p", "tpu_v4", "nvidia_gh200",
+                "amd_mi300a", "intel_pvc"} <= names
+
+    def test_lookup_and_vendor_taxonomy(self):
+        nv = get_backend("nvidia_gh200")
+        assert nv.vendor == "nvidia"
+        assert nv.native_stall_name(StallClass.MEM_DEP) == "long_scoreboard"
+        amd = get_backend("amd_mi300a")
+        assert amd.native_stall_name(StallClass.MEM_DEP) == "s_waitcnt_vmcnt"
+
+    def test_unknown_backend_error_names_known(self):
+        with pytest.raises(UnknownBackendError) as ei:
+            get_backend("tpu_v9000")
+        assert "tpu_v9000" in str(ei.value)
+        assert "tpu_v5e" in str(ei.value)
+        # it is still a KeyError for legacy except-clauses
+        assert isinstance(ei.value, KeyError)
+
+    def test_register_and_duplicate_rejection(self):
+        reg = BackendRegistry()
+        b = Backend(name="acme_asic", vendor="acme", hw=TPU_V5E,
+                    stall_taxonomy=GENERIC_TAXONOMY,
+                    sync=SyncSemantics())
+        reg.register(b)
+        assert reg.get("acme_asic") is b
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register(b)
+        reg.register(b, overwrite=True)   # explicit replace is allowed
+
+    def test_third_party_registration_in_global_registry(self):
+        b = Backend(name="test_tmp_backend", vendor="test", hw=TPU_V5E,
+                    stall_taxonomy=GENERIC_TAXONOMY)
+        try:
+            register_backend(b)
+            assert get_backend("test_tmp_backend") is b
+            assert resolve_backend("test_tmp_backend") is b
+        finally:
+            REGISTRY.unregister("test_tmp_backend")
+
+    def test_resolve_bare_hardware_model_finds_registered(self):
+        assert resolve_backend(TPU_V5E).name == "tpu_v5e"
+
+    def test_resolve_rejects_garbage(self):
+        with pytest.raises(TypeError):
+            resolve_backend(42)
+
+
+# --------------------------------------------------------------------------
+# Pipeline.
+# --------------------------------------------------------------------------
+
+class TestPipeline:
+    def test_default_pass_order(self):
+        assert default_pipeline().names == [
+            "sample", "depgraph", "coverage_before", "sync_edges", "prune",
+            "coverage_after", "blame", "chains", "cct"]
+
+    def test_reorder_preserves_results_when_dataflow_allows(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        base = DEFAULT_PIPELINE.analyze(mod, "tpu_v5e")
+        # cct only needs the profile; hoisting it right after sampling is a
+        # legal reorder and must not change any result
+        hoisted = default_pipeline().reordered(
+            ["sample", "cct", "depgraph", "coverage_before", "sync_edges",
+             "prune", "coverage_after", "blame", "chains"])
+        moved = hoisted.analyze(mod, "tpu_v5e")
+        assert _stable_report(moved) == _stable_report(base)
+
+    def test_invalid_order_raises(self):
+        with pytest.raises(PipelineOrderError, match="chains"):
+            default_pipeline().reordered(
+                ["sample", "depgraph", "coverage_before", "sync_edges",
+                 "prune", "coverage_after", "chains", "blame", "cct"])
+
+    def test_without_pass_skips_artifact(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        pruned = default_pipeline().without("sync_edges")
+        ctx = pruned.run(mod, "tpu_v5e")
+        assert ctx.sync_edges_added is None
+        full = DEFAULT_PIPELINE.run(mod, "tpu_v5e")
+        assert full.sync_edges_added > 0
+
+    def test_custom_pass_insertion_and_hooks(self, async_hlo_text):
+        seen = []
+
+        class EdgeCountPass(AnalysisPass):
+            name = "edge_count"
+            requires = ("graph",)
+
+            def run(self, ctx):
+                seen.append(len(ctx.graph.edges))
+
+        timings = {}
+        pipe = default_pipeline(
+            on_pass_end=lambda p, ctx, secs: timings.setdefault(p.name, secs)
+        ).with_pass(EdgeCountPass(), after="depgraph")
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        an = pipe.analyze(mod, "tpu_v5e")
+        # the inserted pass ran between depgraph and sync_edges, so it saw
+        # the pre-sync edge count
+        assert seen and seen[0] == an.prune_stats.initial_edges - \
+            an.sync_edges_added
+        assert set(timings) == set(pipe.names)
+        assert set(an.pass_seconds) == set(pipe.names)
+
+    def test_duplicate_pass_names_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            Pipeline([CCTPass(), CCTPass()])
+
+    def test_trimmed_pipeline_analyze_raises_named_error(self, async_hlo_text):
+        from repro.core import IncompletePipelineError
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        trimmed = default_pipeline().without("cct")
+        # run() works and simply leaves the artifact unset ...
+        assert trimmed.run(mod, "tpu_v5e").cct is None
+        # ... while analyze() needs the full LeoAnalysis artifact set and
+        # must say which artifact is missing (exported exception type)
+        with pytest.raises(IncompletePipelineError, match="cct"):
+            trimmed.analyze(mod, "tpu_v5e")
+
+
+# --------------------------------------------------------------------------
+# LeoSession caching.
+# --------------------------------------------------------------------------
+
+class TestLeoSession:
+    def test_compare_backends_parses_exactly_once(self, async_hlo_text):
+        """Acceptance criterion: >= 6 backends, one parse."""
+        session = LeoSession(hints={"total_devices": 8})
+        results = session.compare_backends(async_hlo_text)
+        assert len(results) >= 6
+        assert session.stats.parse_misses == 1
+        assert session.stats.parse_calls == len(results)
+        assert session.stats.parse_hits == len(results) - 1
+        # every backend produced a full analysis on the shared module
+        mods = {id(an.module) for an in results.values()}
+        assert len(mods) == 1
+        assert all(an.chains is not None and an.blame is not None
+                   for an in results.values())
+
+    def test_analysis_cache_hit_on_repeat(self, async_hlo_text):
+        session = LeoSession(hints={"total_devices": 8})
+        a1 = session.analyze(async_hlo_text, backend="tpu_v5e")
+        a2 = session.analyze(async_hlo_text, backend="tpu_v5e")
+        assert a1 is a2
+        assert session.stats.analyze_calls == 2
+        assert session.stats.analyze_misses == 1
+
+    def test_graph_cache_reused_across_options(self, async_hlo_text):
+        session = LeoSession(hints={"total_devices": 8})
+        a1 = session.analyze(async_hlo_text, backend="tpu_v5e", n_chains=3)
+        a2 = session.analyze(async_hlo_text, backend="tpu_v5e", n_chains=7)
+        assert a1 is not a2
+        assert session.stats.graph_requests == 2
+        assert session.stats.graph_builds == 1          # second run clones
+        # the clone is independent: both analyses carry their own prune marks
+        assert a1.graph is not a2.graph
+        assert a1.prune_stats.surviving_edges == a2.prune_stats.surviving_edges
+
+    def test_divergent_vendors_diverge(self, async_hlo_text):
+        """Observation 1: the same program models differently across the
+        vendor-class backends (times must not all collapse together)."""
+        session = LeoSession(hints={"total_devices": 8})
+        res = session.compare_backends(
+            async_hlo_text,
+            backends=["tpu_v5e", "nvidia_gh200", "amd_mi300a", "intel_pvc"])
+        times = {n: an.estimated_step_seconds for n, an in res.items()}
+        assert len({round(t, 12) for t in times.values()}) == len(times)
+        # intel_pvc: thin Xe-Link + blocking collectives -> this collective-
+        # heavy fixture must be slowest there among the GPU-class parts
+        assert times["intel_pvc"] > times["nvidia_gh200"]
+        assert times["intel_pvc"] > times["amd_mi300a"]
+
+    def test_vendor_report_speaks_native_taxonomy(self, async_hlo_text):
+        session = LeoSession(hints={"total_devices": 8})
+        an = session.analyze(async_hlo_text, backend="nvidia_gh200")
+        rep = structured_report(an)
+        assert rep["vendor"] == "nvidia"
+        assert rep["stall_taxonomy"]["mem_dep"] == "long_scoreboard"
+        assert any("native_breakdown" in s for s in rep["top_stalls"])
+
+    def test_session_sees_backends_registered_after_construction(
+            self, async_hlo_text):
+        session = LeoSession(hints={"total_devices": 8})
+        n_before = len(session.backends)
+        b = Backend(name="late_registered", vendor="test", hw=TPU_V5E,
+                    stall_taxonomy=GENERIC_TAXONOMY)
+        try:
+            register_backend(b)
+            assert len(session.backends) == n_before + 1
+            res = session.compare_backends(async_hlo_text)
+            assert "late_registered" in res
+        finally:
+            REGISTRY.unregister("late_registered")
+
+    def test_direct_module_identity_keys_do_not_alias(self, async_hlo_text):
+        """Two distinct Module objects must never share a cache entry even
+        if CPython recycles ids (the session retains identity-keyed
+        modules, making reuse impossible while cached)."""
+        session = LeoSession()
+        m1 = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        m2 = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        a1 = session.analyze(m1, backend="tpu_v5e")
+        a2 = session.analyze(m2, backend="tpu_v5e")
+        assert a1.module is m1 and a2.module is m2
+        _, k1 = session._resolve_module(m1, None)
+        _, k2 = session._resolve_module(m2, None)
+        assert k1 != k2
+        assert session._modules[k1] is m1    # retained -> id can't recycle
+
+    def test_batch_reuses_cache(self, async_hlo_text):
+        session = LeoSession(hints={"total_devices": 8})
+        out = session.analyze_batch([async_hlo_text, async_hlo_text],
+                                    backend="tpu_v5e")
+        assert out[0] is out[1]
+        assert session.stats.parse_misses == 1
+
+
+# --------------------------------------------------------------------------
+# Legacy shim parity (acceptance criterion).
+# --------------------------------------------------------------------------
+
+class TestShimParity:
+    def test_analyze_hlo_matches_session(self, async_hlo_text):
+        legacy = analyze_hlo(async_hlo_text, hw=TPU_V5E,
+                             hints={"total_devices": 8})
+        session = LeoSession(hints={"total_devices": 8})
+        new = session.analyze(async_hlo_text, backend="tpu_v5e")
+        assert _stable_report(legacy) == _stable_report(new)
+        assert legacy.summary() == new.summary()
+
+    def test_analyze_module_matches_pipeline(self, async_hlo_text):
+        mod = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        legacy = analyze_module(mod, TPU_V5E, n_chains=4)
+        direct = DEFAULT_PIPELINE.analyze(mod, "tpu_v5e", n_chains=4)
+        assert _stable_report(legacy) == _stable_report(direct)
+
+    def test_cross_backend_analyze_matches_compare_backends(self, async_hlo_text):
+        legacy = cross_backend_analyze(async_hlo_text,
+                                       hints={"total_devices": 8})
+        session = LeoSession(hints={"total_devices": 8})
+        new = session.compare_backends(async_hlo_text)
+        assert set(legacy) == set(new)
+        assert len(legacy) >= 6
+        for name in legacy:
+            assert _stable_report(legacy[name]) == _stable_report(new[name])
+
+    def test_shim_accepts_backend_names(self, async_hlo_text):
+        by_name = analyze_hlo(async_hlo_text, hw="tpu_v5e",
+                              hints={"total_devices": 8})
+        by_model = analyze_hlo(async_hlo_text, hw=TPU_V5E,
+                               hints={"total_devices": 8})
+        assert _stable_report(by_name) == _stable_report(by_model)

@@ -210,6 +210,7 @@ class TestFaultTolerance:
         assert loop.events and "3" in loop.events[0].reason
 
 
+@pytest.mark.slow
 class TestTrainDriver:
     def test_smoke_train_loss_decreases(self, tmp_path):
         from repro.launch.train import main
@@ -229,6 +230,7 @@ class TestTrainDriver:
         assert res["steps"] == 2  # resumed from step 10
 
 
+@pytest.mark.slow
 class TestServeEngine:
     def test_batched_requests_complete(self):
         from repro.launch.serve import main
