@@ -1,17 +1,22 @@
 # Test lanes.
 #
-#   make tier1   — the full tier-1 verify command (what CI and the release
-#                  gate run; includes the ~80s substrate train/serve loops)
-#   make quick   — tier-1 minus tests marked `slow` (substrate end-to-end
-#                  drivers); the faster inner-loop lane
-#   make bench   — the paper-table benchmark suite (not a test gate)
+#   make tier1        — the full tier-1 verify command (what CI and the
+#                       release gate run; includes the ~80s substrate
+#                       train/serve loops)
+#   make quick        — tier-1 minus tests marked `slow` (substrate
+#                       end-to-end drivers); the faster inner-loop lane
+#   make bench        — the paper-table benchmark suite (not a test gate)
+#   make serve-smoke  — the serving entry points end-to-end: continuous-
+#                       batching decode demo (mid-stream admission) plus
+#                       the queue-driven analysis server (cold run, then a
+#                       second process against the warm disk cache)
 
 PY := python
 PYTEST_FLAGS := -x -q
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 quick bench
+.PHONY: tier1 quick bench serve-smoke
 
 tier1:
 	$(PY) -m pytest $(PYTEST_FLAGS)
@@ -21,3 +26,12 @@ quick:
 
 bench:
 	$(PY) -m benchmarks.run
+
+serve-smoke:
+	$(PY) examples/serve_demo.py
+	CACHE=$$(mktemp -d) && \
+	$(PY) -m repro.launch.analysis_server --smoke --requests 8 --slots 3 \
+		--backends all --cache-dir $$CACHE && \
+	$(PY) -m repro.launch.analysis_server --smoke --requests 8 --slots 3 \
+		--backends all --cache-dir $$CACHE; \
+	status=$$?; rm -rf $$CACHE; exit $$status

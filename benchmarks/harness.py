@@ -2,11 +2,11 @@
 
 A workload variant is a list of jitted stages (separate HloModules = separate
 kernel launches).  For each stage we compile once, then hand the HLO text to
-a shared :class:`LeoSession` — the session's content-hash caches mean a stage
-reused across variants/backends is parsed once and its per-backend graphs
-are built once.  The variant's model time is the sum of stage estimated
-times — so inter-kernel HBM traffic (stage outputs re-read by the next
-stage) is naturally priced, and kernel fusion shows up as real speedup.
+a shared :class:`LeoService` — the service's content-hash caches mean a
+stage reused across variants/backends is parsed once and its per-backend
+graphs are built once.  The variant's model time is the sum of stage
+estimated times — so inter-kernel HBM traffic (stage outputs re-read by the
+next stage) is naturally priced, and kernel fusion shows up as real speedup.
 """
 from __future__ import annotations
 
@@ -19,11 +19,12 @@ import jax
 from repro.core import (
     Backend,
     BackendRegistry,
+    Diagnosis,
     LeoAnalysis,
-    LeoSession,
+    LeoService,
+    Recommendation,
     resolve_backend,
 )
-from repro.core.report import Recommendation, recommendations
 
 
 @dataclass
@@ -33,6 +34,7 @@ class VariantResult:
     recs: List[Recommendation]
     root_cause: str
     wall_us: float = 0.0
+    diagnosis: Optional[Diagnosis] = None   # dominant stage, serializable
 
 
 def _root_cause_label(an: LeoAnalysis) -> str:
@@ -53,9 +55,14 @@ def _root_cause_label(an: LeoAnalysis) -> str:
 
 _HLO_CACHE: Dict[Tuple[int, int], str] = {}
 
-#: One session for the whole benchmark process: every table/figure shares
-#: the parse/graph/analysis caches.
-SESSION = LeoSession()
+#: One service for the whole benchmark process: every table/figure shares
+#: the parse/graph/analysis caches (unbounded here — a benchmark run wants
+#: to keep everything it touched).
+SERVICE = LeoService(parse_cache_size=None, graph_cache_size=None,
+                     analysis_cache_size=None, diagnosis_cache_size=None)
+
+#: Backwards-compatible alias: the cached session under the service.
+SESSION = SERVICE.session
 
 
 def analyze_variant(stages, hw, time_wall: bool = False) -> VariantResult:
@@ -69,7 +76,7 @@ def analyze_variant(stages, hw, time_wall: bool = False) -> VariantResult:
         key = (id(fn), id(args))
         if key not in _HLO_CACHE:
             _HLO_CACHE[key] = jax.jit(fn).lower(*args).compile().as_text()
-        an = SESSION.analyze(_HLO_CACHE[key], backend=backend)
+        an = SERVICE.analyze(_HLO_CACHE[key], backend=backend)
         module = an.module
         analyses.append(an)
         total += an.estimated_step_seconds
@@ -87,19 +94,20 @@ def analyze_variant(stages, hw, time_wall: bool = False) -> VariantResult:
 
     # combined recommendations (primary = the dominant stage's)
     dominant = max(analyses, key=lambda a: a.estimated_step_seconds)
-    recs = recommendations(dominant)
+    diag = Diagnosis.from_analysis(dominant)
     if len(stages) > 1:
         # inter-kernel traffic diagnosis: stage boundaries force the full
         # intermediate field through HBM each launch
-        recs.insert(0, Recommendation(
+        diag.recommendations.insert(0, Recommendation(
             action="fuse_kernels", target="<pipeline>", scope="",
             reason=f"{len(stages)} kernel launches round-trip "
                    f"{inter_bytes/2**20:.1f} MiB of intermediates through "
                    "HBM; fuse into one kernel.",
             est_cycles=inter_bytes / backend.hw.hbm_bw * backend.hw.clock_hz))
-    return VariantResult(seconds=total, analyses=analyses, recs=recs,
+    return VariantResult(seconds=total, analyses=analyses,
+                         recs=list(diag.recommendations),
                          root_cause=_root_cause_label(dominant),
-                         wall_us=wall_us)
+                         wall_us=wall_us, diagnosis=diag)
 
 
 def geomean(values: List[float]) -> float:

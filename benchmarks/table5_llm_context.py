@@ -80,7 +80,14 @@ def _strategist_cs(workload, base_result) -> str:
 
 
 def _strategist_cls(workload, base_result) -> str:
-    return base_result.recs[0].action if base_result.recs else "none"
+    """C+L(S) pick from the *serialized* diagnosis — the strategist sees
+    only the JSON payload an agent would receive over the wire, proving
+    the guidance survives the Diagnosis schema round-trip."""
+    from repro.core import Diagnosis
+    if base_result.diagnosis is None:
+        return "none"
+    diag = Diagnosis.from_json(base_result.diagnosis.to_json())
+    return diag.recommendations[0].action if diag.recommendations else "none"
 
 
 def run(hw_name: str = "tpu_v5e") -> Dict[str, dict]:

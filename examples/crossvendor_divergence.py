@@ -1,12 +1,13 @@
 """Observation-1 demo (paper §VI-A, MASS3DEA): the SAME kernel exhibits
 different bottlenecks on different backends, and LEO explains each.
 
-One ``LeoSession.compare_backends`` call fans the compiled program across
+One ``LeoService.compare_backends`` call fans the compiled program across
 every registered backend — three TPU generations plus NVIDIA-, AMD- and
 Intel-class descriptors whose FLOP:HBM:interconnect ratios genuinely differ
-— parsing the HLO exactly once.  Each row prints the vendor's dominant
-stall in its *native* profiler vocabulary (CUPTI / rocprofiler / Level Zero
-/ xplane), the way the paper's §II-D taxonomy maps back out.
+— concurrently over the service thread pool, parsing the HLO exactly once
+(single-flighted).  Each row prints the vendor's dominant stall in its
+*native* profiler vocabulary (CUPTI / rocprofiler / Level Zero / xplane),
+the way the paper's §II-D taxonomy maps back out.
 
   PYTHONPATH=src python examples/crossvendor_divergence.py
 """
@@ -26,7 +27,7 @@ def kernel(table, idx, w1, w2):
 
 
 def main():
-    from repro.core import LeoSession, compute_roofline
+    from repro.core import LeoService, compute_roofline
 
     key = jax.random.PRNGKey(0)
     # sized on the compute/memory knife edge: ~34 GFLOP of matmul vs
@@ -39,11 +40,13 @@ def main():
 
     hlo = jax.jit(kernel).lower(table, idx, w1, w2).compile().as_text()
 
-    session = LeoSession()
-    per_backend = session.compare_backends(hlo)
-    print(f"parsed {session.stats.parse_misses} time(s) for "
-          f"{len(per_backend)} backends "
-          f"({session.stats.parse_hits} cache hits)\n")
+    # the serving entry point: concurrent fan-out over the thread pool,
+    # with the session's single-flight caches keeping one parse
+    service = LeoService()
+    per_backend = service.compare_backends(hlo)
+    print(f"parsed {service.stats.parse_misses} time(s) for "
+          f"{len(per_backend)} backends, concurrently "
+          f"({service.stats.parse_hits} cache hits)\n")
 
     print(f"{'backend':<14s} {'vendor':<7s} {'est. time':>10s} "
           f"{'compute':>9s} {'memory':>9s} {'mem/comp':>9s}  "

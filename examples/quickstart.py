@@ -22,7 +22,7 @@ def main():
 
     # LEO on the compiled step: where would this program stall on a v5e?
     import jax
-    from repro.core import LeoSession
+    from repro.core import LeoService
     from repro.configs import get_config, smoke_config
     from repro.launch.mesh import make_host_mesh
     from repro.launch.train import build
@@ -32,8 +32,8 @@ def main():
         cfg, state, _, pipeline, step_fn = build(
             "qwen2-0.5b", True, 8, 64, mesh)
         compiled = step_fn.lower(state, pipeline.device_batch(0)).compile()
-    session = LeoSession()
-    an = session.analyze(compiled.as_text(), backend="tpu_v5e")
+    service = LeoService()
+    an = service.analyze(compiled.as_text(), backend="tpu_v5e")
     print("\n=== LEO analysis of the compiled train step ===")
     print(an.summary())
     print("per-pass timing: " + ", ".join(
@@ -41,6 +41,13 @@ def main():
     if an.chains:
         print("\ntop dependency chain:")
         print(an.chains[0].describe())
+
+    # the serializable Diagnosis: what a queue/agent consumer receives
+    diag = service.diagnose(compiled.as_text(), backend="tpu_v5e")
+    payload = diag.to_json()
+    print(f"\nDiagnosis payload: {len(payload)} bytes of JSON "
+          f"(schema v{diag.schema_version}); markdown preview:\n")
+    print("\n".join(diag.to_markdown().splitlines()[:8]))
 
 
 if __name__ == "__main__":

@@ -1,10 +1,21 @@
 """LEO core: cross-backend stall root-cause analysis via backward slicing.
 
-The public API has three layers (see ``docs/api.md`` for a tour):
+The public API has four layers (see ``docs/api.md`` for a tour):
 
-**Sessions** — the cached facade most callers want.  Parses each HLO text
-once (content-hash cache), builds each (module, backend) dependency graph
-once, and memoizes whole analyses::
+**Service** — the serving-grade entry point: typed ``AnalyzeRequest`` in,
+serializable ``Diagnosis`` out, bounded LRU + on-disk caches, concurrent
+multi-backend fan-out over a thread pool::
+
+    from repro.core import AnalyzeRequest, LeoService
+    svc = LeoService(cache_dir=".leo_cache")
+    diag = svc.diagnose(hlo_text, backend="tpu_v5e")       # Diagnosis
+    diag.to_json(); diag.to_markdown(); diag.to_llm_context("C+L(S)")
+    svc.submit(AnalyzeRequest(hlo_text=hlo_text))          # queue shape
+
+**Sessions** — the cached facade underneath (raw ``LeoAnalysis`` out).
+Parses each HLO text once (content-hash cache), builds each (module,
+backend) dependency graph once, and memoizes whole analyses; thread-safe
+with single-flight cache fills::
 
     from repro.core import LeoSession
     session = LeoSession()
@@ -38,6 +49,7 @@ from .analyzer import (
     analyze_module,
     cross_backend_analyze,
 )
+from .caching import DiskCache, LRUCache
 from .backends import (
     Backend,
     BackendRegistry,
@@ -89,6 +101,9 @@ from .passes import (
 )
 from .pruning import prune
 from .report import (
+    SCHEMA_VERSION,
+    Diagnosis,
+    Recommendation,
     diagnostic_context,
     recommendations,
     save_json,
@@ -96,11 +111,17 @@ from .report import (
 )
 from .roofline import RooflineReport, compute_roofline
 from .sampler import StallProfile, VirtualSampler, sample
+from .service import AnalyzeRequest, LeoService
 from .session import LeoSession, SessionStats
 from .slicing import StallChain, top_chains
 from .sync_trace import add_sync_edges
 
 __all__ = [
+    # service surface (typed requests / serializable diagnoses)
+    "AnalyzeRequest", "Diagnosis", "LeoService", "Recommendation",
+    "SCHEMA_VERSION",
+    # cache tiers
+    "DiskCache", "LRUCache",
     # session facade
     "LeoSession", "SessionStats",
     # backend registry

@@ -1,0 +1,197 @@
+"""Cache tiers backing `LeoSession` / `LeoService` (serving-scale storage).
+
+Two building blocks:
+
+  * :class:`LRUCache` — a bounded mapping with least-recently-used
+    eviction.  The session's parse/graph/analysis caches were unbounded
+    dicts before; at serving scale ("millions of users") an analyzer that
+    never forgets a trace is a memory leak.  ``capacity=None`` keeps the
+    legacy unbounded behavior.
+  * :class:`DiskCache` — a content-addressed on-disk tier (sha256 key ->
+    gzipped artifact) shared across processes.  Parsed ``Module``s are
+    stored as gzipped pickles, :class:`~repro.core.report.Diagnosis`
+    results as gzipped JSON, so a warm cache directory lets a *second
+    process* re-run an analysis with zero HLO parses (asserted in
+    ``tests/test_service.py``).
+
+Writes are atomic (tmp file + ``os.replace``), so concurrent writers on
+the same key are safe: last writer wins with an intact artifact either
+way.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+import pickle
+import tempfile
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Iterator, MutableMapping, Optional
+
+#: Bump when the pickled Module layout changes incompatibly; stale
+#: artifacts are treated as misses, never as errors.
+MODULE_ARTIFACT_FORMAT = 1
+
+
+class LRUCache(MutableMapping):
+    """Bounded mapping with LRU eviction and an eviction counter.
+
+    ``capacity=None`` disables eviction (legacy unbounded behavior);
+    ``on_evict(key, value)`` lets the owner drop secondary indexes that
+    reference the evicted entry.
+    """
+
+    def __init__(self, capacity: Optional[int] = None,
+                 on_evict: Optional[Callable[[Any, Any], None]] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"LRU capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.evictions = 0
+        self._on_evict = on_evict
+        self._data: "OrderedDict[Any, Any]" = OrderedDict()
+
+    def __getitem__(self, key: Any) -> Any:
+        value = self._data[key]          # KeyError propagates
+        self._data.move_to_end(key)
+        return value
+
+    def __setitem__(self, key: Any, value: Any) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while self.capacity is not None and len(self._data) > self.capacity:
+            old_key, old_value = self._data.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(old_key, old_value)
+
+    def __delitem__(self, key: Any) -> None:
+        del self._data[key]
+
+    def __iter__(self) -> Iterator[Any]:
+        return iter(self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._data
+
+    def __repr__(self) -> str:
+        cap = "inf" if self.capacity is None else self.capacity
+        return (f"LRUCache({len(self._data)}/{cap}, "
+                f"evictions={self.evictions})")
+
+
+class DiskCacheStats:
+    """Hit/miss/write counters for the on-disk tier (thread-safe)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.module_hits = 0
+        self.module_misses = 0
+        self.diagnosis_hits = 0
+        self.diagnosis_misses = 0
+        self.writes = 0
+
+    def bump(self, field: str, by: int = 1) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + by)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {
+            "module_hits": self.module_hits,
+            "module_misses": self.module_misses,
+            "diagnosis_hits": self.diagnosis_hits,
+            "diagnosis_misses": self.diagnosis_misses,
+            "writes": self.writes,
+        }
+
+
+class DiskCache:
+    """Content-addressed artifact store: ``<root>/<kind>/<k[:2]>/<k>.gz``.
+
+    Keys are sha256 hex digests computed by the caller (the session's
+    ``module_key`` / the service's diagnosis key), so identical content
+    always lands on the same path regardless of which process wrote it.
+    Corrupt or format-incompatible artifacts read as misses.
+    """
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        self.stats = DiskCacheStats()
+
+    def _path(self, kind: str, key: str, ext: str) -> str:
+        return os.path.join(self.root, kind, key[:2], f"{key}{ext}")
+
+    def _write_atomic(self, path: str, payload: bytes) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.stats.bump("writes")
+
+    # -- parsed modules (gzipped pickle) ---------------------------------------
+
+    def load_module(self, key: str):
+        path = self._path("modules", key, ".pkl.gz")
+        try:
+            with gzip.open(path, "rb") as f:
+                payload = pickle.load(f)
+            if payload.get("format") != MODULE_ARTIFACT_FORMAT:
+                raise ValueError("stale module artifact format")
+            module = payload["module"]
+        except (OSError, ValueError, KeyError, EOFError,
+                pickle.UnpicklingError, AttributeError):
+            self.stats.bump("module_misses")
+            return None
+        self.stats.bump("module_hits")
+        return module
+
+    def store_module(self, key: str, module: Any) -> None:
+        payload = pickle.dumps(
+            {"format": MODULE_ARTIFACT_FORMAT, "module": module},
+            protocol=pickle.HIGHEST_PROTOCOL)
+        self._write_atomic(self._path("modules", key, ".pkl.gz"),
+                           gzip.compress(payload))
+
+    # -- diagnoses (gzipped JSON) ----------------------------------------------
+
+    def load_diagnosis(self, key: str):
+        from .report import Diagnosis, SCHEMA_VERSION
+        path = self._path("diagnoses", key, ".json.gz")
+        try:
+            with gzip.open(path, "rt", encoding="utf-8") as f:
+                data = json.load(f)
+            if data.get("schema_version") != SCHEMA_VERSION:
+                raise ValueError("stale diagnosis schema")
+            diag = Diagnosis.from_dict(data)
+        except (OSError, ValueError, KeyError, TypeError):
+            self.stats.bump("diagnosis_misses")
+            return None
+        self.stats.bump("diagnosis_hits")
+        return diag
+
+    def store_diagnosis(self, key: str, diagnosis: Any) -> None:
+        self._write_atomic(
+            self._path("diagnoses", key, ".json.gz"),
+            gzip.compress(diagnosis.to_json().encode("utf-8")))
+
+    # -- maintenance -----------------------------------------------------------
+
+    def clear(self) -> None:
+        import shutil
+        for kind in ("modules", "diagnoses"):
+            shutil.rmtree(os.path.join(self.root, kind), ignore_errors=True)
+
+    def __repr__(self) -> str:
+        return f"DiskCache({self.root!r}, {self.stats.as_dict()})"

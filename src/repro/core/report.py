@@ -1,4 +1,15 @@
-"""Structured stall reports and diagnostic-context formats (paper §IV).
+"""Typed diagnosis schema + diagnostic-context formats (paper §IV).
+
+The serving-grade result object is :class:`Diagnosis` — a versioned,
+JSON-round-trippable snapshot of one LEO analysis that survives without
+the in-memory ``LeoAnalysis`` (module, graphs, profile) it came from, so
+it can be cached on disk, shipped over a queue, and handed to humans or
+LLM agents:
+
+    diag = Diagnosis.from_analysis(analysis)
+    diag.to_json()                 # lossless: Diagnosis.from_json round-trips
+    diag.to_markdown()             # human-readable report
+    diag.to_llm_context("C+L(S)", code=src)   # §IV agent context
 
 Three context levels for downstream optimizers (human, LLM, or the
 deterministic rule-engine used by the Table-V benchmark analogue):
@@ -15,15 +26,33 @@ transformations with machine-readable action ids, so the paper's claim —
 "structured dependency chains guide optimization better than raw metrics" —
 is testable here: the rule engine can act on C+L(S) but can only guess from
 C+S (it sees symptoms without causes).
+
+The pre-service free functions (``structured_report``, ``recommendations``,
+``diagnostic_context``, ``save_json``) remain as deprecation shims that
+delegate to :class:`Diagnosis`, so their output is byte-identical to the
+methods they wrap (asserted in ``tests/test_service.py``).
 """
 from __future__ import annotations
 
 import json
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 from .passes import LeoAnalysis
 from .isa import EdgeKind, Instruction, OpClass, StallClass
+
+#: Version stamped into every serialized Diagnosis / AnalyzeRequest; readers
+#: reject (treat as cache miss) payloads from a different schema generation.
+SCHEMA_VERSION = 1
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.report.{old} is deprecated; use {new} instead "
+        f"(shim slated for removal two releases after the LeoService API "
+        f"landed — see docs/api.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclass
@@ -34,13 +63,24 @@ class Recommendation:
     reason: str          # human-readable explanation
     est_cycles: float    # blame cycles addressed by this action
 
+    def to_dict(self) -> Dict[str, Any]:
+        return {"action": self.action, "target": self.target,
+                "scope": self.scope, "reason": self.reason,
+                "est_cycles": self.est_cycles}
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "Recommendation":
+        return cls(action=data["action"], target=data["target"],
+                   scope=data["scope"], reason=data["reason"],
+                   est_cycles=data["est_cycles"])
+
 
 _COLLECTIVE_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                    "collective-permute"}
 
 
-def recommendations(analysis: LeoAnalysis, limit: int = 8
-                    ) -> List[Recommendation]:
+def _build_recommendations(analysis: LeoAnalysis, limit: int = 8
+                           ) -> List[Recommendation]:
     recs: List[Recommendation] = []
     seen_actions = set()
 
@@ -128,135 +168,307 @@ def recommendations(analysis: LeoAnalysis, limit: int = 8
 
 
 # --------------------------------------------------------------------------
-# Structured (JSON-able) report — the C+L(S) payload.
+# Diagnosis — the versioned, serializable analysis result.
 # --------------------------------------------------------------------------
 
-def structured_report(analysis: LeoAnalysis, max_chains: int = 5) -> dict:
-    chains = []
-    for chain in analysis.chains[:max_chains]:
-        chains.append({
-            "stall_cycles": chain.total_stall_cycles,
-            "links": [{
-                "instruction": l.qualified,
-                "opcode": l.opcode,
-                "edge": l.edge_kind.value if l.edge_kind else None,
-                "blame_cycles": l.blame_cycles,
-                "scope": l.op_name,
-                "source": l.source,
-            } for l in chain.links],
-        })
-    backend = analysis.backend
-    stalls = []
-    for rec in analysis.profile.top_stalled(10):
-        instr = analysis.module.find(rec.qualified)
-        entry = {
-            "instruction": rec.qualified,
-            "opcode": instr.opcode if instr else "?",
-            "scope": instr.op_name if instr else "",
-            "latency_samples": rec.latency_samples,
-            "total_samples": rec.total_samples,
-            "breakdown": {k.value: v for k, v in rec.stall_breakdown.items()},
+@dataclass
+class Diagnosis:
+    """Self-contained, JSON-pure snapshot of one analysis.
+
+    Every field is built from plain JSON types (str/int/float/list/dict/
+    None) except ``recommendations`` (a list of :class:`Recommendation`),
+    so ``Diagnosis.from_json(d.to_json()) == d`` holds exactly (property-
+    tested with hypothesis in ``tests/test_service.py``).
+    """
+
+    backend: str = ""
+    module_name: str = ""
+    estimated_step_seconds: float = 0.0
+    total_stall_cycles: float = 0.0
+    coverage_before: float = 0.0
+    coverage_after: float = 0.0
+    pruning: Dict[str, Any] = field(default_factory=dict)
+    top_stalls: List[Dict[str, Any]] = field(default_factory=list)
+    chains: List[Dict[str, Any]] = field(default_factory=list)
+    root_causes: List[Dict[str, Any]] = field(default_factory=list)
+    self_blame: List[Dict[str, Any]] = field(default_factory=list)
+    recommendations: List[Recommendation] = field(default_factory=list)
+    vendor: Optional[str] = None
+    stall_taxonomy: Optional[Dict[str, str]] = None
+    schema_version: int = SCHEMA_VERSION
+
+    # -- construction ----------------------------------------------------------
+
+    @classmethod
+    def from_analysis(cls, analysis: LeoAnalysis, max_chains: int = 5,
+                      max_stalls: int = 15) -> "Diagnosis":
+        # max_stalls=15 preserves the legacy C+S context fidelity (its
+        # shim rendered top_stalled(15)); the report dict consequently
+        # carries 15 stall records where the pre-schema one carried 10 —
+        # an additive change under the versioned schema.
+        chains = []
+        for chain in analysis.chains[:max_chains]:
+            chains.append({
+                "stall_cycles": chain.total_stall_cycles,
+                "links": [{
+                    "instruction": l.qualified,
+                    "opcode": l.opcode,
+                    "edge": l.edge_kind.value if l.edge_kind else None,
+                    "blame_cycles": l.blame_cycles,
+                    "scope": l.op_name,
+                    "source": l.source,
+                } for l in chain.links],
+                "text": chain.describe(),
+            })
+        backend = analysis.backend
+        stalls = []
+        for rec in analysis.profile.top_stalled(max_stalls):
+            instr = analysis.module.find(rec.qualified)
+            entry = {
+                "instruction": rec.qualified,
+                "opcode": instr.opcode if instr else "?",
+                "scope": instr.op_name if instr else "",
+                "latency_samples": rec.latency_samples,
+                "total_samples": rec.total_samples,
+                "breakdown": {k.value: v
+                              for k, v in rec.stall_breakdown.items()},
+            }
+            if backend is not None:
+                # the same counters in the vendor profiler's own vocabulary
+                # (CUPTI / rocprofiler / Level Zero / xplane), for agents
+                # that cross-check against native tool output
+                entry["native_breakdown"] = {
+                    backend.native_stall_name(k): v
+                    for k, v in rec.stall_breakdown.items()}
+            stalls.append(entry)
+        return cls(
+            backend=analysis.hw.name,
+            module_name=analysis.module.name,
+            estimated_step_seconds=analysis.estimated_step_seconds,
+            total_stall_cycles=analysis.profile.total_stall_cycles,
+            coverage_before=analysis.coverage_before.coverage,
+            coverage_after=analysis.coverage_after.coverage,
+            pruning={
+                "initial_edges": analysis.prune_stats.initial_edges,
+                "pruned": dict(analysis.prune_stats.pruned_by_stage),
+                "surviving": analysis.prune_stats.surviving_edges,
+            },
+            top_stalls=stalls,
+            chains=chains,
+            root_causes=[
+                {"instruction": q, "blame_cycles": c,
+                 "scope": (analysis.module.find(q).op_name
+                           if analysis.module.find(q) else "")}
+                for q, c in analysis.blame.top_root_causes(10)],
+            self_blame=[
+                {"instruction": s.qualified, "cycles": s.cycles,
+                 "subcategory": s.subcategory}
+                for s in analysis.blame.self_blame[:10]],
+            recommendations=_build_recommendations(analysis),
+            vendor=backend.vendor if backend is not None else None,
+            stall_taxonomy=(backend.taxonomy_table()
+                            if backend is not None else None),
+        )
+
+    # -- serialization ---------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """The structured C+L(S) payload (superset of the legacy
+        ``structured_report`` dict; ``vendor``/``stall_taxonomy`` are
+        omitted when the analysis carried no Backend descriptor, matching
+        the legacy shape)."""
+        out: Dict[str, Any] = {
+            "schema_version": self.schema_version,
+            "backend": self.backend,
+            "module": self.module_name,
         }
-        if backend is not None:
-            # the same counters in the vendor profiler's own vocabulary
-            # (CUPTI / rocprofiler / Level Zero / xplane), for agents that
-            # cross-check against native tool output
-            entry["native_breakdown"] = {
-                backend.native_stall_name(k): v
-                for k, v in rec.stall_breakdown.items()}
-        stalls.append(entry)
-    report_head = {
-        "backend": analysis.hw.name,
-        "module": analysis.module.name,
-    }
-    if backend is not None:
-        report_head["vendor"] = backend.vendor
-        report_head["stall_taxonomy"] = backend.taxonomy_table()
-    return {
-        **report_head,
-        "estimated_step_seconds": analysis.estimated_step_seconds,
-        "total_stall_cycles": analysis.profile.total_stall_cycles,
-        "single_dependency_coverage": {
-            "before": analysis.coverage_before.coverage,
-            "after": analysis.coverage_after.coverage,
-        },
-        "pruning": {
-            "initial_edges": analysis.prune_stats.initial_edges,
-            "pruned": analysis.prune_stats.pruned_by_stage,
-            "surviving": analysis.prune_stats.surviving_edges,
-        },
-        "top_stalls": stalls,
-        "root_cause_chains": chains,
-        "root_causes": [
-            {"instruction": q, "blame_cycles": c,
-             "scope": (analysis.module.find(q).op_name
-                       if analysis.module.find(q) else "")}
-            for q, c in analysis.blame.top_root_causes(10)],
-        "self_blame": [
-            {"instruction": s.qualified, "cycles": s.cycles,
-             "subcategory": s.subcategory}
-            for s in analysis.blame.self_blame[:10]],
-        "recommendations": [
-            {"action": r.action, "target": r.target, "scope": r.scope,
-             "reason": r.reason, "est_cycles": r.est_cycles}
-            for r in recommendations(analysis)],
-    }
+        if self.vendor is not None:
+            out["vendor"] = self.vendor
+        if self.stall_taxonomy is not None:
+            out["stall_taxonomy"] = dict(self.stall_taxonomy)
+        out.update({
+            "estimated_step_seconds": self.estimated_step_seconds,
+            "total_stall_cycles": self.total_stall_cycles,
+            "single_dependency_coverage": {
+                "before": self.coverage_before,
+                "after": self.coverage_after,
+            },
+            "pruning": self.pruning,
+            "top_stalls": self.top_stalls,
+            "root_cause_chains": self.chains,
+            "root_causes": self.root_causes,
+            "self_blame": self.self_blame,
+            "recommendations": [r.to_dict() for r in self.recommendations],
+        })
+        return out
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "Diagnosis":
+        version = data.get("schema_version", 0)
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"Diagnosis schema_version {version} != {SCHEMA_VERSION}")
+        cov = data.get("single_dependency_coverage", {})
+        return cls(
+            backend=data["backend"],
+            module_name=data["module"],
+            estimated_step_seconds=data["estimated_step_seconds"],
+            total_stall_cycles=data["total_stall_cycles"],
+            coverage_before=cov.get("before", 0.0),
+            coverage_after=cov.get("after", 0.0),
+            pruning=data.get("pruning", {}),
+            top_stalls=data.get("top_stalls", []),
+            chains=data.get("root_cause_chains", []),
+            root_causes=data.get("root_causes", []),
+            self_blame=data.get("self_blame", []),
+            recommendations=[Recommendation.from_dict(r)
+                             for r in data.get("recommendations", [])],
+            vendor=data.get("vendor"),
+            stall_taxonomy=data.get("stall_taxonomy"),
+            schema_version=version,
+        )
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=False)
+
+    def copy(self) -> "Diagnosis":
+        """Deep copy via the (lossless) JSON round-trip — used by the
+        service caches so caller-side mutation cannot poison a cached or
+        disk-persisted entry.  (The dict round-trip would alias the
+        nested lists/dicts; serializing breaks every reference.)"""
+        return Diagnosis.from_json(self.to_json())
+
+    @classmethod
+    def from_json(cls, payload: str) -> "Diagnosis":
+        return cls.from_dict(json.loads(payload))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2))
+
+    # -- presentation ----------------------------------------------------------
+
+    def to_markdown(self) -> str:
+        """Human-readable report (the profiler-UI rendering)."""
+        lines = [
+            f"# LEO diagnosis — `{self.module_name}` on `{self.backend}`",
+            "",
+            f"- estimated step time: "
+            f"**{self.estimated_step_seconds*1e3:.3f} ms**",
+            f"- total stall cycles: {self.total_stall_cycles:,.0f}",
+            f"- single-dependency coverage: {self.coverage_before:.0%} -> "
+            f"{self.coverage_after:.0%} after sync/prune",
+            f"- edges: {self.pruning.get('initial_edges', 0)} -> "
+            f"{self.pruning.get('surviving', 0)} after pruning",
+        ]
+        if self.vendor:
+            lines.append(f"- vendor: {self.vendor}")
+        if self.root_causes:
+            lines += ["", "## Top root causes", ""]
+            for rc in self.root_causes[:5]:
+                lines.append(f"1. `{rc['instruction']}` — "
+                             f"{rc['blame_cycles']:,.0f} blamed cycles"
+                             + (f" (scope `{rc['scope']}`)"
+                                if rc.get("scope") else ""))
+        if self.chains:
+            lines += ["", "## Ranked dependency chains", ""]
+            for i, chain in enumerate(self.chains):
+                lines.append(f"### Chain {i+1} "
+                             f"({chain['stall_cycles']:,.0f} stall cycles)")
+                lines += ["```", chain.get("text", ""), "```"]
+        if self.recommendations:
+            lines += ["", "## Recommendations", ""]
+            for r in self.recommendations:
+                lines.append(f"- **{r.action}** at `{r.target}`: {r.reason} "
+                             f"(~{r.est_cycles:,.0f} cycles)")
+        return "\n".join(lines) + "\n"
+
+    def to_llm_context(self, level: str, code: str = "") -> str:
+        """§IV diagnostic-context payloads (C / C+S / C+L(S))."""
+        if level == "C":
+            return _context_c(code)
+        if level == "C+S":
+            lines = [_context_c(code), "### Raw stall counts (PC sampling)"]
+            for s in self.top_stalls:
+                brk = ", ".join(f"{k}={v:,.0f}"
+                                for k, v in s["breakdown"].items())
+                lines.append(f"- `{s['instruction']}` [{s['opcode']}]: "
+                             f"{s['latency_samples']:,.0f} stall cycles "
+                             f"({brk})")
+            return "\n".join(lines) + "\n"
+        if level == "C+L(S)":
+            lines = [_context_c(code), "### LEO root-cause analysis"]
+            lines.append(f"Estimated step time: "
+                         f"{self.estimated_step_seconds*1e3:.3f} ms on "
+                         f"{self.backend}")
+            lines.append("#### Ranked dependency chains "
+                         "(symptom -> root cause)")
+            for i, chain in enumerate(self.chains):
+                lines.append(f"Chain {i+1} "
+                             f"({chain['stall_cycles']:,.0f} stall cycles):")
+                lines.append(chain.get("text", ""))
+            lines.append("#### Recommendations")
+            for r in self.recommendations:
+                lines.append(f"- [{r.action}] {r.reason} "
+                             f"(~{r.est_cycles:,.0f} cycles at `{r.target}`"
+                             f"{', scope ' + r.scope if r.scope else ''})")
+            return "\n".join(lines) + "\n"
+        raise ValueError(f"unknown context level {level!r}")
 
 
-# --------------------------------------------------------------------------
-# Diagnostic-context levels for the §IV study.
-# --------------------------------------------------------------------------
-
-def context_c(code: str) -> str:
+def _context_c(code: str) -> str:
     return f"### Kernel source\n```\n{code}\n```\n"
 
 
+# --------------------------------------------------------------------------
+# Deprecation shims — byte-identical delegates to Diagnosis.
+# --------------------------------------------------------------------------
+
+def recommendations(analysis: LeoAnalysis, limit: int = 8
+                    ) -> List[Recommendation]:
+    """Deprecated: use ``Diagnosis.from_analysis(analysis).recommendations``."""
+    _deprecated("recommendations", "Diagnosis.from_analysis(...).recommendations")
+    return _build_recommendations(analysis, limit)
+
+
+def structured_report(analysis: LeoAnalysis, max_chains: int = 5) -> dict:
+    """Deprecated: use ``Diagnosis.from_analysis(analysis).to_dict()``."""
+    _deprecated("structured_report", "Diagnosis.from_analysis(...).to_dict()")
+    return Diagnosis.from_analysis(analysis, max_chains=max_chains).to_dict()
+
+
+def context_c(code: str) -> str:
+    """Deprecated: use ``Diagnosis.to_llm_context('C', code=...)``."""
+    return _context_c(code)
+
+
 def context_cs(code: str, analysis: LeoAnalysis) -> str:
-    """Code + raw per-instruction stall counts (vendor-profiler level)."""
-    lines = [context_c(code), "### Raw stall counts (PC sampling)"]
-    for rec in analysis.profile.top_stalled(15):
-        instr = analysis.module.find(rec.qualified)
-        op = instr.opcode if instr else "?"
-        brk = ", ".join(f"{k.value}={v:,.0f}"
-                        for k, v in rec.stall_breakdown.items())
-        lines.append(f"- `{rec.qualified}` [{op}]: "
-                     f"{rec.latency_samples:,.0f} stall cycles ({brk})")
-    return "\n".join(lines) + "\n"
+    """Deprecated: use ``Diagnosis.to_llm_context('C+S', code=...)``."""
+    return Diagnosis.from_analysis(analysis).to_llm_context("C+S", code=code)
 
 
 def context_cls(code: str, analysis: LeoAnalysis) -> str:
-    """Code + LEO's full root-cause analysis (the paper's C+L(S))."""
-    rep = structured_report(analysis)
-    lines = [context_c(code), "### LEO root-cause analysis"]
-    lines.append(f"Estimated step time: "
-                 f"{rep['estimated_step_seconds']*1e3:.3f} ms on "
-                 f"{rep['backend']}")
-    lines.append("#### Ranked dependency chains (symptom -> root cause)")
-    for i, chain in enumerate(analysis.chains[:5]):
-        lines.append(f"Chain {i+1} "
-                     f"({chain.total_stall_cycles:,.0f} stall cycles):")
-        lines.append(chain.describe())
-    lines.append("#### Recommendations")
-    for r in rep["recommendations"]:
-        lines.append(f"- [{r['action']}] {r['reason']} "
-                     f"(~{r['est_cycles']:,.0f} cycles at `{r['target']}`"
-                     f"{', scope ' + r['scope'] if r['scope'] else ''})")
-    return "\n".join(lines) + "\n"
+    """Deprecated: use ``Diagnosis.to_llm_context('C+L(S)', code=...)``."""
+    return Diagnosis.from_analysis(analysis).to_llm_context("C+L(S)",
+                                                            code=code)
 
 
 def diagnostic_context(level: str, code: str,
                        analysis: Optional[LeoAnalysis] = None) -> str:
+    """Deprecated: use ``Diagnosis.to_llm_context(level, code=...)``."""
+    _deprecated("diagnostic_context", "Diagnosis.to_llm_context(level, code)")
     if level == "C":
-        return context_c(code)
+        return _context_c(code)
     if analysis is None:
         raise ValueError("levels C+S and C+L(S) require an analysis")
-    if level == "C+S":
-        return context_cs(code, analysis)
-    if level == "C+L(S)":
-        return context_cls(code, analysis)
+    if level in ("C+S", "C+L(S)"):
+        return Diagnosis.from_analysis(analysis).to_llm_context(level,
+                                                                code=code)
     raise ValueError(f"unknown context level {level!r}")
 
 
 def save_json(analysis: LeoAnalysis, path: str) -> None:
+    """Deprecated: use ``Diagnosis.from_analysis(analysis).save(path)``."""
+    _deprecated("save_json", "Diagnosis.from_analysis(...).save(path)")
     with open(path, "w") as f:
-        json.dump(structured_report(analysis), f, indent=2)
+        json.dump(Diagnosis.from_analysis(analysis).to_dict(), f, indent=2)

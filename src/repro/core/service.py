@@ -1,0 +1,362 @@
+"""`LeoService`: the serving-grade analysis API.
+
+Where :class:`~repro.core.session.LeoSession` is an in-process cache,
+``LeoService`` is the production surface a profiler-adjacent analyzer
+needs to serve heavy traffic:
+
+  * **typed requests** — :class:`AnalyzeRequest` is a versioned,
+    JSON-round-trippable request schema (what a queue or RPC layer
+    carries), and every answer is a serializable
+    :class:`~repro.core.report.Diagnosis`;
+  * **bounded caches** — the session tiers run with LRU capacities by
+    default, plus a diagnosis LRU in front of the pipeline;
+  * **on-disk persistence** — pass ``cache_dir=`` and parsed modules +
+    diagnoses are content-addressed onto disk (sha256 -> gzip), so a
+    second process re-running the same trace performs zero HLO parses;
+  * **concurrent fan-out** — ``analyze_batch`` / ``compare_backends`` /
+    ``diagnose_batch`` run over a shared thread pool; the session's
+    single-flight caches keep the parse-once invariant under concurrency
+    (stats-asserted in ``tests/test_service.py``).
+
+::
+
+    svc = LeoService(cache_dir="experiments/.leo_cache")
+    diag = svc.diagnose(hlo_text, backend="tpu_v5e")     # Diagnosis
+    per_vendor = svc.compare_backends(hlo_text)          # concurrent
+    svc.submit(AnalyzeRequest(hlo_text=hlo, backend="amd_mi300a"))
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
+
+from .backends import BackendLike, resolve_backend
+from .caching import DiskCache, LRUCache
+from .isa import Module
+from .passes import LeoAnalysis, Pipeline
+from .report import SCHEMA_VERSION, Diagnosis
+from .session import LeoSession, ModuleLike, SessionStats
+
+#: Bump when analysis *semantics* change without a schema change (pass
+#: internals, blame weighting, recommendation rules): part of the disk
+#: diagnosis key, so old cache_dir artifacts read as misses, never as
+#: stale answers.  Backend constant changes are fingerprinted
+#: automatically (see `LeoService._diagnosis_key`).
+DIAGNOSIS_KEY_VERSION = 1
+
+
+@dataclass
+class AnalyzeRequest:
+    """One unit of service work: a program plus analysis knobs.
+
+    ``backend=None`` targets the service default; set ``backends`` to fan
+    the same program across several vendor models in one request (the
+    Observation-1 shape).  The schema is versioned and JSON-round-trips,
+    so requests can ride a queue between processes.
+    """
+
+    hlo_text: str = ""
+    backend: Optional[str] = None
+    backends: Optional[List[str]] = None
+    hints: Optional[Dict[str, Any]] = None
+    n_chains: int = 5
+    prune_unexecuted: bool = True
+    request_id: Optional[str] = None
+    schema_version: int = SCHEMA_VERSION
+
+    def validate(self) -> None:
+        if not self.hlo_text:
+            raise ValueError("AnalyzeRequest.hlo_text must be non-empty")
+        if self.backend is not None and self.backends is not None:
+            raise ValueError(
+                "set AnalyzeRequest.backend or .backends, not both")
+        if self.schema_version != SCHEMA_VERSION:
+            raise ValueError(
+                f"AnalyzeRequest schema_version {self.schema_version} != "
+                f"{SCHEMA_VERSION}")
+        if self.n_chains < 1:
+            raise ValueError("n_chains must be >= 1")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema_version": self.schema_version,
+            "hlo_text": self.hlo_text,
+            "backend": self.backend,
+            "backends": self.backends,
+            "hints": self.hints,
+            "n_chains": self.n_chains,
+            "prune_unexecuted": self.prune_unexecuted,
+            "request_id": self.request_id,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "AnalyzeRequest":
+        return cls(
+            hlo_text=data.get("hlo_text", ""),
+            backend=data.get("backend"),
+            backends=data.get("backends"),
+            hints=data.get("hints"),
+            n_chains=data.get("n_chains", 5),
+            prune_unexecuted=data.get("prune_unexecuted", True),
+            request_id=data.get("request_id"),
+            schema_version=data.get("schema_version", 0),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=False)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "AnalyzeRequest":
+        return cls.from_dict(json.loads(payload))
+
+
+class LeoService:
+    """Bounded-cache, disk-persistent, concurrent analysis service.
+
+    The service owns a :class:`LeoSession` (exposed as ``.session`` for
+    callers that need raw ``LeoAnalysis`` artifacts) and adds the typed
+    request/diagnosis surface on top.  Default cache capacities are
+    serving-grade bounds rather than the session's legacy ``None``
+    (unbounded).
+    """
+
+    def __init__(self, pipeline: Optional[Pipeline] = None,
+                 backends: Optional[Sequence[BackendLike]] = None,
+                 hints: Optional[dict] = None,
+                 default_backend: BackendLike = "tpu_v5e",
+                 parse_cache_size: Optional[int] = 64,
+                 graph_cache_size: Optional[int] = 256,
+                 analysis_cache_size: Optional[int] = 512,
+                 diagnosis_cache_size: Optional[int] = 512,
+                 cache_dir: Optional[str] = None,
+                 max_workers: int = 8):
+        self.disk_cache = DiskCache(cache_dir) if cache_dir else None
+        self.session = LeoSession(
+            pipeline=pipeline, backends=backends, hints=hints,
+            default_backend=default_backend,
+            parse_cache_size=parse_cache_size,
+            graph_cache_size=graph_cache_size,
+            analysis_cache_size=analysis_cache_size,
+            disk_cache=self.disk_cache)
+        self.max_workers = max_workers
+        self._diagnoses: LRUCache = LRUCache(diagnosis_cache_size)
+        self._lock = threading.Lock()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self.diagnosis_hits = 0
+        self.diagnosis_misses = 0
+
+    # -- plumbing --------------------------------------------------------------
+
+    @property
+    def stats(self) -> SessionStats:
+        return self.session.stats
+
+    def stats_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = dict(self.session.stats.as_dict())
+        out["cache_evictions"] = self.session.cache_evictions
+        out["diagnosis_hits"] = self.diagnosis_hits
+        out["diagnosis_misses"] = self.diagnosis_misses
+        if self.disk_cache is not None:
+            out["disk"] = self.disk_cache.stats.as_dict()
+        return out
+
+    def _executor(self) -> Optional[ThreadPoolExecutor]:
+        """The shared pool — or None when already on a pool worker (a
+        nested fan-out must run inline, otherwise bounded workers waiting
+        on tasks that cannot be scheduled deadlock the pool)."""
+        if threading.current_thread().name.startswith("leo-service"):
+            return None
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.max_workers,
+                    thread_name_prefix="leo-service")
+            return self._pool
+
+    def close(self) -> None:
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    def __enter__(self) -> "LeoService":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def _fan_out(self, call, items: Sequence[Any]) -> List[Any]:
+        """Run ``call(item)`` per item — on the pool when one is available
+        (never nested inside a pool worker), serially otherwise.  Results
+        come back in item order; the first failure propagates."""
+        items = list(items)
+        pool = self._executor() if len(items) > 1 else None
+        if pool is None:
+            return [call(it) for it in items]
+        futs = [pool.submit(call, it) for it in items]
+        return [f.result() for f in futs]
+
+    # -- raw-analysis surface (LeoAnalysis out) --------------------------------
+
+    def parse(self, hlo_text: str, hints: Optional[dict] = None) -> Module:
+        return self.session.parse(hlo_text, hints=hints)
+
+    def analyze(self, program: ModuleLike, **kwargs: Any) -> LeoAnalysis:
+        return self.session.analyze(program, **kwargs)
+
+    def analyze_batch(self, programs: Iterable[ModuleLike], *,
+                      backend: Optional[BackendLike] = None,
+                      **kwargs: Any) -> List[LeoAnalysis]:
+        """Concurrent fan-out: each program analyzed on the thread pool.
+
+        The session's single-flight caches make duplicate programs in the
+        batch collapse to one parse / one pipeline run."""
+        return self._fan_out(
+            lambda p: self.session.analyze(p, backend=backend, **kwargs),
+            programs)
+
+    def compare_backends(self, program: ModuleLike, *,
+                         backends: Optional[Sequence[BackendLike]] = None,
+                         hints: Optional[dict] = None,
+                         **kwargs: Any) -> Dict[str, LeoAnalysis]:
+        """Observation-1 fan-out, concurrently: same program, every
+        backend, one parse (single-flighted under the pool)."""
+        targets = [resolve_backend(b) for b in backends] \
+            if backends is not None else self.session.backends
+        results = self._fan_out(
+            lambda b: self.session.analyze(program, backend=b, hints=hints,
+                                           **kwargs), targets)
+        return {b.name: r for b, r in zip(targets, results)}
+
+    # -- diagnosis surface (serializable Diagnosis out) ------------------------
+
+    def _diagnosis_key(self, program: ModuleLike, backend: Any,
+                       hints: Optional[dict], n_chains: int,
+                       prune_unexecuted: bool) -> Optional[str]:
+        """Content key for a diagnosis; None for identity-keyed Modules
+        (not content-hashable, so never disk-cached).
+
+        The key fingerprints the *backend descriptor contents* (hardware
+        constants, taxonomy, sync knobs) rather than just its name, so
+        recalibrating e.g. ``nvidia_gh200``'s HBM bandwidth invalidates
+        every diagnosis cached under the old constants instead of
+        silently serving stale estimates from a warm ``cache_dir``.
+        ``DIAGNOSIS_KEY_VERSION`` covers analysis-code changes that keys
+        cannot see (pass internals, recommendation rules): bump it when
+        their semantics change."""
+        if isinstance(program, Module):
+            return None
+        mkey = self.session.module_key(program, hints)
+        backend_fp = repr((backend.name, backend.vendor, backend.hw,
+                           sorted((k.value, v) for k, v
+                                  in backend.stall_taxonomy.items()),
+                           backend.sync))
+        h = hashlib.sha256()
+        h.update(json.dumps([
+            mkey, backend_fp, n_chains, prune_unexecuted,
+            SCHEMA_VERSION, DIAGNOSIS_KEY_VERSION,
+            self.session.pipeline.names,
+        ]).encode())
+        return h.hexdigest()
+
+    def diagnose(self, program: ModuleLike, *,
+                 backend: Optional[BackendLike] = None,
+                 hints: Optional[dict] = None,
+                 n_chains: int = 5,
+                 prune_unexecuted: bool = True) -> Diagnosis:
+        """Analyze and return the serializable :class:`Diagnosis`,
+        consulting the memory and disk diagnosis tiers first — a warm
+        disk tier answers without parsing or running the pipeline."""
+        b = resolve_backend(backend) if backend is not None \
+            else self.session.default_backend
+        dkey = self._diagnosis_key(program, b, hints, n_chains,
+                                   prune_unexecuted)
+        # cached entries are returned as copies: a caller mutating its
+        # Diagnosis (e.g. inserting a pipeline-level recommendation, as
+        # benchmarks/harness.py does) must not poison the shared cache
+        if dkey is not None:
+            with self._lock:
+                cached = self._diagnoses.get(dkey)
+                if cached is not None:
+                    self.diagnosis_hits += 1
+            if cached is not None:
+                return cached.copy()
+            if self.disk_cache is not None:
+                diag = self.disk_cache.load_diagnosis(dkey)
+                if diag is not None:
+                    with self._lock:
+                        self.diagnosis_hits += 1
+                        self._diagnoses[dkey] = diag
+                    return diag.copy()
+        with self._lock:
+            self.diagnosis_misses += 1
+        analysis = self.session.analyze(
+            program, backend=b, hints=hints, n_chains=n_chains,
+            prune_unexecuted=prune_unexecuted)
+        diag = Diagnosis.from_analysis(analysis, max_chains=n_chains)
+        if dkey is not None:
+            with self._lock:
+                self._diagnoses[dkey] = diag.copy()
+            if self.disk_cache is not None:
+                self.disk_cache.store_diagnosis(dkey, diag)
+        return diag
+
+    def submit(self, request: AnalyzeRequest
+               ) -> Union[Diagnosis, Dict[str, Diagnosis]]:
+        """Serve one typed request.  Returns a single ``Diagnosis``, or a
+        ``{backend: Diagnosis}`` map when the request names ``backends``."""
+        request.validate()
+        if request.backends is not None:
+            return self.diagnose_fanout(
+                request.hlo_text, backends=request.backends,
+                hints=request.hints, n_chains=request.n_chains,
+                prune_unexecuted=request.prune_unexecuted)
+        return self.diagnose(
+            request.hlo_text, backend=request.backend, hints=request.hints,
+            n_chains=request.n_chains,
+            prune_unexecuted=request.prune_unexecuted)
+
+    def submit_async(self, request: AnalyzeRequest) -> Future:
+        """`submit` as a Future — the non-blocking shape a queue-driven
+        front-end (e.g. ``repro.launch.analysis_server``) consumes.  Runs
+        on the shared pool; degrades to an already-resolved Future when
+        called from a pool worker (same no-nesting rule as `_fan_out`)."""
+        request.validate()
+        pool = self._executor()
+        if pool is not None:
+            return pool.submit(self.submit, request)
+        fut: Future = Future()
+        try:
+            fut.set_result(self.submit(request))
+        except Exception as e:  # noqa: BLE001 - future carries the failure
+            fut.set_exception(e)
+        return fut
+
+    def diagnose_batch(self, requests: Sequence[AnalyzeRequest]
+                       ) -> List[Union[Diagnosis, Dict[str, Diagnosis]]]:
+        """Concurrent typed-request batch (order-preserving)."""
+        requests = list(requests)
+        for r in requests:
+            r.validate()
+        return self._fan_out(self.submit, requests)
+
+    def diagnose_fanout(self, program: ModuleLike, *,
+                        backends: Optional[Sequence[BackendLike]] = None,
+                        hints: Optional[dict] = None,
+                        **kwargs: Any) -> Dict[str, Diagnosis]:
+        """``compare_backends`` with serializable results."""
+        targets = [resolve_backend(b) for b in backends] \
+            if backends is not None else self.session.backends
+        results = self._fan_out(
+            lambda b: self.diagnose(program, backend=b, hints=hints,
+                                    **kwargs), targets)
+        return {b.name: r for b, r in zip(targets, results)}
+
+    def __repr__(self) -> str:
+        disk = self.disk_cache.root if self.disk_cache is not None else None
+        return (f"LeoService(session={self.session!r}, disk={disk!r}, "
+                f"workers={self.max_workers})")

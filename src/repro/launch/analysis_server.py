@@ -1,0 +1,257 @@
+"""Queue-driven analysis server: "analysis as a service" as an entry point.
+
+The LEO analogue of `launch/serve.py`'s token-serving engine, mirroring its
+slot pattern: :class:`AnalyzeRequest`s (HLO traces plus analysis knobs)
+queue into a fixed pool of worker slots; each engine tick admits queued
+requests to free slots (dispatching them onto the shared
+:class:`~repro.core.service.LeoService` thread pool) and harvests finished
+:class:`~repro.core.report.Diagnosis` results.  The service's single-flight
+caches mean N queued requests for the same trace cost one parse and one
+pipeline run, and a warm ``--cache-dir`` serves repeat traffic from disk
+without parsing at all.
+
+Usage (smoke: built-in demo traces, 3 slots):
+
+  PYTHONPATH=src python -m repro.launch.analysis_server --smoke
+
+  PYTHONPATH=src python -m repro.launch.analysis_server \\
+      --hlo experiments/dryrun/qwen2__train_4k__single.hlo.gz \\
+      --backends tpu_v5e,nvidia_gh200,amd_mi300a --cache-dir .leo_cache
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from ..core import AnalyzeRequest, Diagnosis, LeoService
+
+
+@dataclass
+class _Slot:
+    request: Optional[AnalyzeRequest] = None
+    future: Optional[Future] = None
+    admitted_at: float = 0.0
+
+
+@dataclass
+class ServerResult:
+    request_id: str
+    diagnosis: Optional[Diagnosis] = None      # single-backend requests
+    fanout: Optional[Dict[str, Diagnosis]] = None  # multi-backend requests
+    error: Optional[str] = None
+    seconds: float = 0.0
+
+
+class AnalysisServer:
+    """Slot-based continuous batching over `LeoService.submit`.
+
+    Deliberately the same shape as ``ServeEngine``: ``submit`` enqueues,
+    ``tick`` fills free slots and harvests completions, ``run`` loops
+    until drained.  Slots bound the number of in-flight analyses
+    independently of queue depth — the admission-control half of a
+    serving deployment, with the service pool as the execution half.
+    """
+
+    def __init__(self, service: Optional[LeoService] = None,
+                 slots: int = 4):
+        self.service = service or LeoService(max_workers=max(slots, 2))
+        self.slots = [_Slot() for _ in range(slots)]
+        self.queue: List[AnalyzeRequest] = []
+        self.results: Dict[str, ServerResult] = {}
+        self._auto_rid = 0
+
+    def submit(self, request: AnalyzeRequest) -> str:
+        request.validate()
+        if request.request_id is None:
+            request.request_id = f"req-{self._auto_rid}"
+            self._auto_rid += 1
+        self.queue.append(request)
+        return request.request_id
+
+    @property
+    def active(self) -> bool:
+        return bool(self.queue) or any(s.request for s in self.slots)
+
+    def _fill_slots(self) -> None:
+        for slot in self.slots:
+            if slot.request is None and self.queue:
+                req = self.queue.pop(0)
+                slot.request = req
+                slot.admitted_at = time.perf_counter()
+                slot.future = self.service.submit_async(req)
+
+    def _harvest(self) -> int:
+        done = 0
+        for slot in self.slots:
+            if slot.request is None or not slot.future.done():
+                continue
+            rid = slot.request.request_id
+            res = ServerResult(
+                request_id=rid,
+                seconds=time.perf_counter() - slot.admitted_at)
+            try:
+                out = slot.future.result()
+                if isinstance(out, dict):
+                    res.fanout = out
+                else:
+                    res.diagnosis = out
+            except Exception as e:  # noqa: BLE001 - report failures as results
+                res.error = f"{type(e).__name__}: {e}"
+            self.results[rid] = res
+            slot.request = None
+            slot.future = None
+            done += 1
+        return done
+
+    def tick(self) -> int:
+        """One engine step: admit queued requests, harvest completions.
+        Returns the number of requests finished this tick."""
+        self._fill_slots()
+        return self._harvest()
+
+    def run(self, poll_seconds: float = 0.005) -> Dict[str, ServerResult]:
+        while self.active:
+            if self.tick() == 0:
+                time.sleep(poll_seconds)
+        return self.results
+
+
+# --------------------------------------------------------------------------
+# Entry point.
+# --------------------------------------------------------------------------
+
+#: Format-valid demo trace (async collective + gather + while loop): the
+#: features the stall taxonomy diverges on across vendors.
+_DEMO_HLO = """\
+HloModule demo_trace_{seed}
+
+%body.1 (p.1: (s32[], f32[{n},{n}])) -> (s32[], f32[{n},{n}]) {{
+  %p.1 = (s32[], f32[{n},{n}]) parameter(0)
+  %iv = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %iv2 = s32[] add(%iv, %one)
+  %acc = f32[{n},{n}] get-tuple-element(%p.1), index=1
+  %gain = f32[{n},{n}] multiply(%acc, %acc)
+  ROOT %out = (s32[], f32[{n},{n}]) tuple(%iv2, %gain)
+}}
+
+%cond.1 (p.2: (s32[], f32[{n},{n}])) -> pred[] {{
+  %p.2 = (s32[], f32[{n},{n}]) parameter(0)
+  %iv3 = s32[] get-tuple-element(%p.2), index=0
+  %lim = s32[] constant({trips})
+  ROOT %lt = pred[] compare(%iv3, %lim), direction=LT
+}}
+
+ENTRY %main.1 (arg0: f32[{n},{n}], arg1: f32[{n},{n}]) -> f32[{n},{n}] {{
+  %arg0 = f32[{n},{n}] parameter(0)
+  %arg1 = f32[{n},{n}] parameter(1)
+  %gather.1 = f32[{n},{n}] gather(%arg0, %arg1), metadata={{op_name="jit(step)/model/embed/gather"}}
+  %ag-start = f32[{n},{n}] all-gather-start(%gather.1), channel_id=1, replica_groups=[2,4]<=[8], dimensions={{0}}, metadata={{op_name="jit(step)/model/layer/allgather"}}
+  %indep = f32[{n},{n}] multiply(%arg1, %arg1)
+  %ag-done = f32[{n},{n}] all-gather-done(%ag-start), metadata={{op_name="jit(step)/model/layer/allgather"}}
+  %dot.1 = f32[{n},{n}] dot(%ag-done, %indep), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}, metadata={{op_name="jit(step)/model/layer/mlp/dot_general"}}
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[{n},{n}]) tuple(%zero, %dot.1)
+  %loop = (s32[], f32[{n},{n}]) while(%init), condition=%cond.1, body=%body.1
+  %result = f32[{n},{n}] get-tuple-element(%loop), index=1
+  ROOT %final = f32[{n},{n}] add(%result, %indep)
+}}
+"""
+
+
+def demo_hlo(seed: int = 0, n: int = 128, trips: int = 5) -> str:
+    return _DEMO_HLO.format(seed=seed, n=n, trips=trips)
+
+
+def _load_hlo(path: str) -> str:
+    if path.endswith(".gz"):
+        with gzip.open(path, "rt") as f:
+            return f.read()
+    with open(path) as f:
+        return f.read()
+
+
+def main(argv=None) -> Dict[str, ServerResult]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hlo", action="append", default=[],
+                    help="HLO text file (.hlo or .hlo.gz); repeatable")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use built-in demo traces (duplicates included, "
+                         "to exercise single-flight dedup)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--backends", default="",
+                    help="comma list; empty = service default backend, "
+                         "'all' = fan out across every registered backend")
+    ap.add_argument("--cache-dir", default=None,
+                    help="content-addressed disk cache shared across runs")
+    ap.add_argument("--hints-devices", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    if not args.hlo and not args.smoke:
+        ap.error("give --hlo file(s) or --smoke")
+
+    texts = [_load_hlo(p) for p in args.hlo]
+    if args.smoke:
+        # fewer distinct traces than requests: repeats collapse in-cache
+        texts += [demo_hlo(seed=i, n=128 + 32 * (i % 3))
+                  for i in range(max(2, args.requests // 2))]
+
+    backends = None
+    fanout = False
+    if args.backends == "all":
+        fanout = True
+    elif args.backends:
+        names = args.backends.split(",")
+        backends, fanout = (names, True) if len(names) > 1 else (None, False)
+
+    service = LeoService(cache_dir=args.cache_dir,
+                         max_workers=max(args.slots, 2))
+    server = AnalysisServer(service, slots=args.slots)
+    hints = {"total_devices": args.hints_devices}
+    for i in range(args.requests):
+        req = AnalyzeRequest(hlo_text=texts[i % len(texts)], hints=hints)
+        if fanout:
+            req.backends = backends if backends is not None else \
+                [b.name for b in service.session.backends]
+        elif args.backends:
+            req.backend = args.backends
+        server.submit(req)
+
+    t0 = time.perf_counter()
+    results = server.run()
+    wall = time.perf_counter() - t0
+
+    errors = 0
+    for rid in sorted(results, key=lambda r: int(r.split("-")[-1])):
+        res = results[rid]
+        if res.error is not None:
+            errors += 1
+            print(f"{rid}: ERROR {res.error}")
+            continue
+        diags = res.fanout if res.fanout is not None \
+            else {"": res.diagnosis}
+        for d in diags.values():
+            top = d.root_causes[0]["instruction"] if d.root_causes else "-"
+            print(f"{rid} [{d.backend}]: "
+                  f"est {d.estimated_step_seconds*1e6:9.1f} us, "
+                  f"top root cause: {top}")
+    stats = service.stats_dict()
+    print(f"\n{len(results)} requests via {len(server.slots)} slots in "
+          f"{wall:.2f}s; parses: {stats['parse_calls']} calls -> "
+          f"{service.stats.parse_misses} actual "
+          f"(+{stats['parse_disk_hits']} from disk), "
+          f"analyses: {stats['analyze_calls']} calls -> "
+          f"{stats['analyze_calls'] - stats['analyze_hits']} runs")
+    if errors:
+        raise SystemExit(f"{errors} request(s) failed")
+    service.close()
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -128,13 +128,29 @@ def _parse_flags(spec: str) -> dict:
     return out
 
 
+_SERVICES = {}
+
+
+def get_service(outdir: str):
+    """One disk-backed LeoService per artifact dir: every cell in this
+    process shares the parse/graph/analysis caches, and a *second process*
+    re-running a cell against the warm `<outdir>/.leo_cache` performs zero
+    HLO parses (modules and diagnoses reload from the content-addressed
+    disk tier)."""
+    from ..core import LeoService
+    svc = _SERVICES.get(outdir)
+    if svc is None:
+        svc = LeoService(cache_dir=os.path.join(outdir, ".leo_cache"))
+        _SERVICES[outdir] = svc
+    return svc
+
+
 def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
              analyze: bool = False, save_hlo: bool = False,
              hw_name: str = "tpu_v5e", force: bool = False,
              model_flags: dict = None) -> dict:
     from ..configs import get_config, get_shape, model_flops, shapes_for
-    from ..core import analyze_module, get_backend, parse_hlo
-    from ..core.report import structured_report
+    from ..core import get_backend
     from ..core.roofline import compute_roofline
     from .mesh import make_production_mesh
 
@@ -164,7 +180,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         hlo = compiled.as_text()
-        module = parse_hlo(hlo, hints={"total_devices": chips})
+        service = get_service(outdir)
+        hints = {"total_devices": chips}
+        module = service.parse(hlo, hints=hints)
         hw = get_backend(hw_name).hw
         rl = compute_roofline(
             module, hw, chips=chips, label=label,
@@ -173,8 +191,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
         result = {"label": label, "status": "ok", "chips": chips,
                   "compile_seconds": secs, "roofline": rl.to_dict()}
         if analyze:
-            an = analyze_module(module, hw)
-            result["leo"] = structured_report(an)
+            diag = service.diagnose(hlo, backend=hw_name, hints=hints)
+            result["leo"] = diag.to_dict()
         if save_hlo:
             with gzip.open(os.path.join(outdir, label + ".hlo.gz"),
                            "wt") as f:

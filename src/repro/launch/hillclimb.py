@@ -72,12 +72,11 @@ def run_variant(arch, shape_name, name, model_flags, opt_overrides,
                 mesh_kind, outdir, hw_name="tpu_v5e", analyze=True,
                 force=False):
     from ..configs import get_config, get_shape, model_flops
-    from ..core import analyze_module, get_backend, parse_hlo
-    from ..core.report import structured_report
+    from ..core import get_backend
     from ..core.roofline import compute_roofline
     from ..models.flags import flags as flags_ctx
     from ..runtime.steps import TrainOptions, default_microbatch
-    from .dryrun import lower_cell
+    from .dryrun import get_service, lower_cell
     from .mesh import make_production_mesh
 
     label = f"{arch}__{shape_name}__{name}"
@@ -99,7 +98,9 @@ def run_variant(arch, shape_name, name, model_flags, opt_overrides,
         lowered, compiled, secs = lower_cell(cfg, shape, mesh, opts=opts)
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()
-    module = parse_hlo(hlo, hints={"total_devices": chips})
+    service = get_service(outdir)
+    hints = {"total_devices": chips}
+    module = service.parse(hlo, hints=hints)
     hw = get_backend(hw_name).hw
     rl = compute_roofline(module, hw, chips=chips, label=label,
                           model_flops=model_flops(cfg, shape),
@@ -109,8 +110,7 @@ def run_variant(arch, shape_name, name, model_flags, opt_overrides,
               "options": opt_overrides, "compile_seconds": secs,
               "roofline": rl.to_dict()}
     if analyze:
-        an = analyze_module(module, hw)
-        rep = structured_report(an)
+        rep = service.diagnose(hlo, backend=hw_name, hints=hints).to_dict()
         result["leo"] = {
             "top_stalls": rep["top_stalls"][:3],
             "root_causes": rep["root_causes"][:5],

@@ -43,19 +43,38 @@ class ServeEngine:
         self.batch_slots = batch_slots
         self.max_len = max_len
         self.state = init_decode_state(cfg, batch_slots, max_len)
+        # pristine single-slot state, written into a slot at admission:
+        # recurrent mixers (SSM/xLSTM) carry hidden state across tokens,
+        # so a reused slot must not leak its previous occupant's state
+        # into the next request (KV slots are safe via position masking,
+        # but they are reset too — it is the same write)
+        self._fresh_state = init_decode_state(cfg, 1, max_len)
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: List[Request] = []
-        self._step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        # per-slot position vector: a freed slot re-admits at pos=0 while
+        # its neighbors keep decoding mid-stream (continuous batching
+        # without the old pos=0 admission-alignment restriction)
+        self._step = jax.jit(make_serve_step(cfg, per_slot_pos=True),
+                             donate_argnums=(1,))
 
     def submit(self, request: Request) -> None:
         self.queue.append(request)
 
+    def _reset_slot_state(self, idx: int) -> None:
+        """Overwrite batch slot `idx` (axis 1 of every (L, B, ...) state
+        leaf) with freshly-initialized decode state."""
+        self.state = jax.tree.map(
+            lambda st, fresh: st.at[:, idx].set(
+                fresh[:, 0].astype(st.dtype)),
+            self.state, self._fresh_state)
+
     def _fill_slots(self) -> None:
-        for slot in self.slots:
+        for i, slot in enumerate(self.slots):
             if slot.request is None and self.queue:
                 slot.request = self.queue.pop(0)
                 slot.pos = 0
                 slot.feed_idx = 0
+                self._reset_slot_state(i)
 
     @property
     def active(self) -> bool:
@@ -65,7 +84,9 @@ class ServeEngine:
         """One engine step: feed prompt token or consume generated token."""
         self._fill_slots()
         tokens = np.zeros((self.batch_slots,), np.int32)
+        pos = np.zeros((self.batch_slots,), np.int32)
         for i, slot in enumerate(self.slots):
+            pos[i] = slot.pos
             r = slot.request
             if r is None:
                 continue
@@ -73,13 +94,8 @@ class ServeEngine:
                 tokens[i] = r.prompt[slot.feed_idx]
             else:
                 tokens[i] = r.generated[-1] if r.generated else 0
-        # NOTE: slots share a scalar pos in this engine; slot admission is
-        # aligned to pos=0 at smoke scale. Production pods use per-slot
-        # position vectors (decode kernels already take pos per call).
-        pos = jnp.int32(max(s.pos for s in self.slots if s.request)
-                        if any(s.request for s in self.slots) else 0)
         next_tok, logits, self.state = self._step(
-            self.params, self.state, jnp.asarray(tokens), pos)
+            self.params, self.state, jnp.asarray(tokens), jnp.asarray(pos))
         next_tok = np.asarray(next_tok)
         for i, slot in enumerate(self.slots):
             r = slot.request

@@ -115,7 +115,38 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig = AdamWConfig(),
     return train_step
 
 
-def make_serve_step(cfg: ArchConfig, chunk: int = 512):
+def make_serve_step(cfg: ArchConfig, chunk: int = 512,
+                    per_slot_pos: bool = False):
+    """Single-token decode step.
+
+    ``per_slot_pos=False`` (legacy): ``pos`` is a scalar shared by every
+    batch row — fine when all slots advance in lockstep.  With
+    ``per_slot_pos=True`` ``pos`` is a ``(B,)`` vector and each batch slot
+    decodes at its own position (vmapped over the batch axis; per-slot KV
+    writes lower to scatters), which is what continuous batching needs:
+    a freed slot admits a new request at pos=0 while its neighbors keep
+    decoding mid-stream.
+    """
+    if per_slot_pos:
+        def one_slot(params, state, token, pos):
+            # re-insert the batch axis (=1) that vmap strips, so the
+            # model sees its normal (L, B, ...) state layout
+            state_b = jax.tree.map(lambda l: l[:, None], state)
+            logits, new_state = model_decode_step(
+                params, state_b, cfg, token[None], pos)
+            return logits[0], jax.tree.map(lambda l: l[:, 0], new_state)
+
+        vstep = jax.vmap(one_slot, in_axes=(None, 1, 0, 0),
+                         out_axes=(0, 1))
+
+        def serve_step(params, state, token: jnp.ndarray,
+                       pos: jnp.ndarray):
+            logits, new_state = vstep(params, state, token, pos)
+            next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_token, logits, new_state
+
+        return serve_step
+
     def serve_step(params, state, token: jnp.ndarray, pos: jnp.ndarray):
         logits, new_state = model_decode_step(params, state, cfg, token, pos)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,139 @@
+"""Per-backend divergence regression (ROADMAP open item).
+
+Golden snapshot of what each registered vendor descriptor says about the
+fixed async-collective HLO fixture: top root causes, recommended action,
+dominant stall in the unified §II-D taxonomy AND the vendor-native
+vocabulary, plus the modeled step time.  Any drift in a backend's
+class-estimate constants, taxonomy table, or the blame/pruning pipeline
+shows up here as a precise per-backend diff instead of a silent
+cross-vendor collapse.
+
+When a constant is *intentionally* recalibrated (e.g. against
+vendor-published microbenchmarks), regenerate the golden block:
+
+  PYTHONPATH=src python tests/test_backend_divergence.py
+"""
+import pytest
+
+from repro.core import LeoService
+
+#: backend -> expected snapshot on the ASYNC_HLO fixture (8 devices).
+GOLDEN = {
+    "amd_mi300a": {
+        "vendor": "amd",
+        "top_root_causes": ["main.1::send.1", "main.1::ag-start",
+                            "main.1::gather.1"],
+        "top_action": "overlap_or_reshard_collective",
+        "dominant_stall": "collective_wait",
+        "dominant_native": "xgmi_wait",
+        "est_step_seconds": 1.3694410101078169e-05,
+    },
+    "intel_pvc": {
+        "vendor": "intel",
+        "top_root_causes": ["main.1::send.1", "main.1::ag-start",
+                            "main.1::gather.1"],
+        "top_action": "overlap_or_reshard_collective",
+        "dominant_stall": "collective_wait",
+        "dominant_native": "xelink_wait",
+        "est_step_seconds": 2.5089868292682942e-05,
+    },
+    "nvidia_gh200": {
+        "vendor": "nvidia",
+        "top_root_causes": ["main.1::send.1", "main.1::ag-start",
+                            "main.1::gather.1"],
+        "top_action": "overlap_or_reshard_collective",
+        "dominant_stall": "collective_wait",
+        "dominant_native": "membar",
+        "est_step_seconds": 1.2805013803278685e-05,
+    },
+    "tpu_v4": {
+        "vendor": "google",
+        "top_root_causes": ["main.1::send.1", "main.1::ag-start",
+                            "main.1::gather.1"],
+        "top_action": "overlap_or_reshard_collective",
+        "dominant_stall": "collective_wait",
+        "dominant_native": "ici_wait",
+        "est_step_seconds": 8.056923914999224e-06,
+    },
+    "tpu_v5e": {
+        "vendor": "google",
+        "top_root_causes": ["main.1::send.1", "main.1::ag-start",
+                            "main.1::gather.1"],
+        "top_action": "overlap_or_reshard_collective",
+        "dominant_stall": "collective_wait",
+        "dominant_native": "ici_wait",
+        "est_step_seconds": 9.404746294650976e-06,
+    },
+    "tpu_v5p": {
+        "vendor": "google",
+        "top_root_causes": ["main.1::send.1", "main.1::ag-start",
+                            "main.1::gather.1"],
+        "top_action": "overlap_or_reshard_collective",
+        "dominant_stall": "collective_wait",
+        "dominant_native": "ici_wait",
+        "est_step_seconds": 4.330242965641951e-06,
+    },
+}
+
+
+def _snapshot(diag) -> dict:
+    dominant = max(diag.top_stalls[0]["breakdown"],
+                   key=diag.top_stalls[0]["breakdown"].get)
+    return {
+        "vendor": diag.vendor,
+        "top_root_causes": [rc["instruction"]
+                            for rc in diag.root_causes[:3]],
+        "top_action": (diag.recommendations[0].action
+                       if diag.recommendations else None),
+        "dominant_stall": dominant,
+        "dominant_native": diag.stall_taxonomy[dominant],
+        "est_step_seconds": diag.estimated_step_seconds,
+    }
+
+
+@pytest.fixture(scope="module")
+def diagnoses():
+    from conftest import ASYNC_HLO
+    service = LeoService()
+    return service.diagnose_fanout(ASYNC_HLO, hints={"total_devices": 8})
+
+
+class TestBackendDivergenceRegression:
+    def test_every_golden_backend_is_registered(self, diagnoses):
+        missing = set(GOLDEN) - set(diagnoses)
+        assert not missing, f"backends vanished from the registry: {missing}"
+
+    @pytest.mark.parametrize("backend", sorted(GOLDEN))
+    def test_backend_snapshot(self, diagnoses, backend):
+        got = _snapshot(diagnoses[backend])
+        want = dict(GOLDEN[backend])
+        est_want = want.pop("est_step_seconds")
+        est_got = got.pop("est_step_seconds")
+        assert got == want
+        assert est_got == pytest.approx(est_want, rel=1e-9)
+
+    def test_vendor_taxonomies_actually_diverge(self, diagnoses):
+        """The same unified stall must speak differently per vendor —
+        drift that collapses taxonomies to one vocabulary is a bug."""
+        natives = {GOLDEN[b]["dominant_native"] for b in GOLDEN}
+        assert len(natives) >= 4   # ici/membar/xgmi/xelink at minimum
+
+    def test_modeled_times_diverge(self, diagnoses):
+        times = {b: d.estimated_step_seconds for b, d in diagnoses.items()
+                 if b in GOLDEN}
+        assert len({round(t, 12) for t in times.values()}) == len(times)
+
+
+if __name__ == "__main__":
+    # regenerate the GOLDEN block after an intentional recalibration
+    import sys
+    sys.path.insert(0, "tests")
+    from conftest import ASYNC_HLO
+    diags = LeoService().diagnose_fanout(ASYNC_HLO,
+                                         hints={"total_devices": 8})
+    for name in sorted(diags):
+        snap = _snapshot(diags[name])
+        print(f'    "{name}": {{')
+        for k, v in snap.items():
+            print(f'        "{k}": {v!r},')
+        print("    },")

@@ -1,0 +1,336 @@
+"""Tests for the serving-grade API: typed AnalyzeRequest/Diagnosis schema,
+bounded LRU + on-disk cache tiers, concurrent fan-out with single-flight
+dedup, and deprecation-shim parity (byte-identical to Diagnosis output)."""
+import json
+
+import pytest
+
+from repro.core import (
+    AnalyzeRequest,
+    Diagnosis,
+    LeoService,
+    LeoSession,
+    LRUCache,
+    Recommendation,
+    SCHEMA_VERSION,
+    analyze_hlo,
+    diagnostic_context,
+    recommendations,
+    structured_report,
+)
+
+
+@pytest.fixture()
+def analysis(async_hlo_text):
+    return analyze_hlo(async_hlo_text, hw="tpu_v5e",
+                       hints={"total_devices": 8})
+
+
+# --------------------------------------------------------------------------
+# LRUCache unit behavior.
+# --------------------------------------------------------------------------
+
+class TestLRUCache:
+    def test_eviction_order_is_lru_not_fifo(self):
+        evicted = []
+        c = LRUCache(2, on_evict=lambda k, v: evicted.append(k))
+        c["a"], c["b"] = 1, 2
+        _ = c["a"]              # touch: b is now least-recent
+        c["c"] = 3
+        assert evicted == ["b"]
+        assert set(c) == {"a", "c"}
+        assert c.evictions == 1
+
+    def test_unbounded_when_capacity_none(self):
+        c = LRUCache(None)
+        for i in range(1000):
+            c[i] = i
+        assert len(c) == 1000 and c.evictions == 0
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            LRUCache(0)
+
+
+# --------------------------------------------------------------------------
+# AnalyzeRequest schema.
+# --------------------------------------------------------------------------
+
+class TestAnalyzeRequest:
+    def test_json_round_trip(self):
+        req = AnalyzeRequest(hlo_text="HloModule m", backend="tpu_v5e",
+                             hints={"total_devices": 8}, n_chains=3,
+                             request_id="r-1")
+        back = AnalyzeRequest.from_json(req.to_json())
+        assert back == req
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            AnalyzeRequest().validate()
+        with pytest.raises(ValueError, match="not both"):
+            AnalyzeRequest(hlo_text="x", backend="a",
+                           backends=["b"]).validate()
+        bad = AnalyzeRequest(hlo_text="x", schema_version=SCHEMA_VERSION + 1)
+        with pytest.raises(ValueError, match="schema_version"):
+            bad.validate()
+
+
+# --------------------------------------------------------------------------
+# Diagnosis schema: losslessness + views.
+# --------------------------------------------------------------------------
+
+class TestDiagnosis:
+    def test_real_diagnosis_json_round_trip_is_lossless(self, analysis):
+        d = Diagnosis.from_analysis(analysis)
+        back = Diagnosis.from_json(d.to_json())
+        assert back == d
+        assert back.to_json() == d.to_json()
+
+    def test_version_mismatch_rejected(self, analysis):
+        payload = json.loads(Diagnosis.from_analysis(analysis).to_json())
+        payload["schema_version"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema_version"):
+            Diagnosis.from_dict(payload)
+
+    def test_markdown_view(self, analysis):
+        md = Diagnosis.from_analysis(analysis).to_markdown()
+        assert md.startswith("# LEO diagnosis")
+        assert "## Top root causes" in md
+        assert "## Recommendations" in md
+
+    def test_llm_context_levels_nest(self, analysis):
+        d = Diagnosis.from_analysis(analysis)
+        c = d.to_llm_context("C", code="kernel src")
+        cs = d.to_llm_context("C+S", code="kernel src")
+        cls_ = d.to_llm_context("C+L(S)", code="kernel src")
+        assert len(c) < len(cs) < len(cls_)
+        assert "root-cause" in cls_
+        with pytest.raises(ValueError, match="unknown context level"):
+            d.to_llm_context("C+X")
+
+    def test_property_round_trip_lossless(self):
+        """from_json(to_json(d)) == d over generated instances."""
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        finite = st.floats(allow_nan=False, allow_infinity=False)
+        text = st.text(max_size=12)
+        jsonish = st.dictionaries(text, st.one_of(finite, text,
+                                                  st.integers(),
+                                                  st.none()),
+                                  max_size=4)
+        recs = st.builds(Recommendation, action=text, target=text,
+                         scope=text, reason=text, est_cycles=finite)
+        diags = st.builds(
+            Diagnosis,
+            backend=text, module_name=text,
+            estimated_step_seconds=finite, total_stall_cycles=finite,
+            coverage_before=finite, coverage_after=finite,
+            pruning=jsonish,
+            top_stalls=st.lists(jsonish, max_size=3),
+            chains=st.lists(jsonish, max_size=3),
+            root_causes=st.lists(jsonish, max_size=3),
+            self_blame=st.lists(jsonish, max_size=3),
+            recommendations=st.lists(recs, max_size=3),
+            vendor=st.one_of(st.none(), text),
+            stall_taxonomy=st.one_of(st.none(),
+                                     st.dictionaries(text, text,
+                                                     max_size=3)),
+            schema_version=st.just(SCHEMA_VERSION),
+        )
+
+        @settings(max_examples=50, deadline=None)
+        @given(diags)
+        def check(d):
+            assert Diagnosis.from_json(d.to_json()) == d
+
+        check()
+
+
+# --------------------------------------------------------------------------
+# Deprecation shims: byte-identical to the Diagnosis methods they wrap.
+# --------------------------------------------------------------------------
+
+class TestShimParity:
+    def test_structured_report_matches_diagnosis_bytes(self, analysis):
+        with pytest.warns(DeprecationWarning, match="structured_report"):
+            legacy = structured_report(analysis)
+        new = Diagnosis.from_analysis(analysis).to_dict()
+        assert json.dumps(legacy, sort_keys=False) == \
+            json.dumps(new, sort_keys=False)
+
+    def test_diagnostic_context_matches_to_llm_context_bytes(self, analysis):
+        d = Diagnosis.from_analysis(analysis)
+        for level in ("C", "C+S", "C+L(S)"):
+            with pytest.warns(DeprecationWarning):
+                legacy = diagnostic_context(level, "src", analysis)
+            assert legacy == d.to_llm_context(level, code="src")
+
+    def test_recommendations_shim_matches_field(self, analysis):
+        with pytest.warns(DeprecationWarning, match="recommendations"):
+            legacy = recommendations(analysis)
+        assert legacy == Diagnosis.from_analysis(analysis).recommendations
+
+
+# --------------------------------------------------------------------------
+# Bounded cache tiers.
+# --------------------------------------------------------------------------
+
+class TestBoundedCaches:
+    def test_parse_lru_eviction_re_misses(self, async_hlo_text):
+        """Capacity-1 parse cache: A, B, A again -> three real parses."""
+        session = LeoSession(hints={"total_devices": 8},
+                             parse_cache_size=1)
+        other = async_hlo_text.replace("fixture_async", "fixture_other")
+        session.parse(async_hlo_text)
+        session.parse(other)                 # evicts A
+        session.parse(async_hlo_text)        # must re-parse
+        assert session.stats.parse_misses == 3
+        assert session.cache_evictions["parse"] == 2
+        # within-capacity access still hits
+        assert session.stats.parse_calls == 3
+
+    def test_analysis_lru_eviction_re_runs(self, async_hlo_text):
+        session = LeoSession(hints={"total_devices": 8},
+                             analysis_cache_size=1)
+        session.analyze(async_hlo_text, backend="tpu_v5e")
+        session.analyze(async_hlo_text, backend="tpu_v5p")   # evicts v5e
+        session.analyze(async_hlo_text, backend="tpu_v5e")   # re-runs
+        assert session.stats.analyze_misses == 3
+        assert session.stats.parse_misses == 1   # parse tier unaffected
+        assert session.cache_evictions["analysis"] == 2
+
+    def test_identity_keys_stay_unique_across_evictions(self,
+                                                        async_hlo_text):
+        """Identity keys carry a monotonic suffix: even with the parse
+        LRU pinned at capacity (constant len), two distinct Modules can
+        never produce the same key, so a recycled id() after eviction
+        cannot resurface another module's cached analyses."""
+        from repro.core import parse_hlo
+        session = LeoSession(parse_cache_size=1)
+        m1 = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        m2 = parse_hlo(async_hlo_text, hints={"total_devices": 8})
+        _, k1 = session._resolve_module(m1, None)
+        _, k2 = session._resolve_module(m2, None)   # evicts m1
+        assert k1 != k2
+        assert session.cache_evictions["parse"] == 1
+
+    def test_unbounded_by_default(self, async_hlo_text):
+        session = LeoSession(hints={"total_devices": 8})
+        session.analyze(async_hlo_text, backend="tpu_v5e")
+        session.analyze(async_hlo_text, backend="tpu_v5e")
+        assert session.stats.analyze_misses == 1
+        assert session.cache_evictions == {"parse": 0, "graph": 0,
+                                           "analysis": 0}
+
+
+# --------------------------------------------------------------------------
+# On-disk tier: cross-process persistence.
+# --------------------------------------------------------------------------
+
+class TestDiskCache:
+    def test_second_cold_session_parses_zero_times(self, async_hlo_text,
+                                                   tmp_path):
+        """Acceptance criterion: warm disk cache -> zero HLO parses."""
+        svc1 = LeoService(cache_dir=str(tmp_path))
+        an1 = svc1.analyze(async_hlo_text, backend="tpu_v5e",
+                           hints={"total_devices": 8})
+        assert svc1.stats.parse_misses == 1
+
+        svc2 = LeoService(cache_dir=str(tmp_path))   # "second process"
+        an2 = svc2.analyze(async_hlo_text, backend="tpu_v5e",
+                           hints={"total_devices": 8})
+        assert svc2.stats.parse_misses == 0
+        assert svc2.stats.parse_disk_hits == 1
+        assert an2.estimated_step_seconds == an1.estimated_step_seconds
+
+    def test_second_cold_service_serves_diagnosis_without_pipeline(
+            self, async_hlo_text, tmp_path):
+        svc1 = LeoService(cache_dir=str(tmp_path))
+        d1 = svc1.diagnose(async_hlo_text, backend="tpu_v5e",
+                           hints={"total_devices": 8})
+        svc2 = LeoService(cache_dir=str(tmp_path))
+        d2 = svc2.diagnose(async_hlo_text, backend="tpu_v5e",
+                           hints={"total_devices": 8})
+        assert d2 == d1
+        # neither parsed nor analyzed: the gzipped JSON answered
+        assert svc2.stats.parse_calls == 0
+        assert svc2.stats.analyze_calls == 0
+        assert svc2.diagnosis_hits == 1
+        assert svc2.disk_cache.stats.diagnosis_hits == 1
+
+    def test_corrupt_artifact_reads_as_miss(self, async_hlo_text, tmp_path):
+        svc1 = LeoService(cache_dir=str(tmp_path))
+        svc1.diagnose(async_hlo_text, hints={"total_devices": 8})
+        # truncate every artifact
+        for p in tmp_path.rglob("*.gz"):
+            p.write_bytes(b"not gzip")
+        svc2 = LeoService(cache_dir=str(tmp_path))
+        d = svc2.diagnose(async_hlo_text, hints={"total_devices": 8})
+        assert svc2.stats.parse_misses == 1      # fell back to parsing
+        assert d.module_name
+
+
+# --------------------------------------------------------------------------
+# Concurrency: fan-out with single-flight dedup.
+# --------------------------------------------------------------------------
+
+class TestConcurrentFanout:
+    def test_concurrent_compare_backends_parses_once(self, async_hlo_text):
+        """Acceptance criterion: >=6 backends on the thread pool, 1 parse."""
+        svc = LeoService(hints={"total_devices": 8}, max_workers=6)
+        results = svc.compare_backends(async_hlo_text)
+        assert len(results) >= 6
+        assert svc.stats.parse_misses == 1
+        assert svc.stats.parse_calls == len(results)
+        mods = {id(an.module) for an in results.values()}
+        assert len(mods) == 1
+        # each backend ran its own pipeline
+        assert svc.stats.analyze_misses == len(results)
+        svc.close()
+
+    def test_concurrent_batch_of_duplicates_single_flights(
+            self, async_hlo_text):
+        svc = LeoService(hints={"total_devices": 8}, max_workers=8)
+        out = svc.analyze_batch([async_hlo_text] * 8, backend="tpu_v5e")
+        assert len(out) == 8
+        assert all(an is out[0] for an in out)
+        assert svc.stats.parse_misses == 1
+        assert svc.stats.analyze_misses == 1     # 7 waited on the winner
+        svc.close()
+
+    def test_diagnose_batch_typed_requests(self, async_hlo_text):
+        svc = LeoService(max_workers=4)
+        reqs = [AnalyzeRequest(hlo_text=async_hlo_text,
+                               backend=b, hints={"total_devices": 8})
+                for b in ("tpu_v5e", "tpu_v5p", "nvidia_gh200")]
+        reqs.append(AnalyzeRequest(hlo_text=async_hlo_text,
+                                   backends=["amd_mi300a", "intel_pvc"],
+                                   hints={"total_devices": 8}))
+        out = svc.diagnose_batch(reqs)
+        assert [isinstance(o, Diagnosis) for o in out] == \
+            [True, True, True, False]
+        assert set(out[3]) == {"amd_mi300a", "intel_pvc"}
+        assert svc.stats.parse_misses == 1
+        svc.close()
+
+    def test_caller_mutation_cannot_poison_diagnosis_cache(
+            self, async_hlo_text):
+        svc = LeoService()
+        d1 = svc.diagnose(async_hlo_text, backend="tpu_v5e",
+                          hints={"total_devices": 8})
+        d1.recommendations.insert(0, Recommendation(
+            action="fuse_kernels", target="<pipeline>", scope="",
+            reason="caller-side insertion", est_cycles=1.0))
+        d2 = svc.diagnose(async_hlo_text, backend="tpu_v5e",
+                          hints={"total_devices": 8})
+        assert all(r.action != "fuse_kernels" for r in d2.recommendations)
+        assert svc.diagnosis_hits == 1
+
+    def test_service_submit_returns_serializable(self, async_hlo_text):
+        svc = LeoService()
+        diag = svc.submit(AnalyzeRequest(hlo_text=async_hlo_text,
+                                         backend="amd_mi300a",
+                                         hints={"total_devices": 8}))
+        assert Diagnosis.from_json(diag.to_json()) == diag
+        assert diag.vendor == "amd"
