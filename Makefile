@@ -10,13 +10,17 @@
 #                       batching decode demo (mid-stream admission) plus
 #                       the queue-driven analysis server (cold run, then a
 #                       second process against the warm disk cache)
+#   make sync-smoke   — the SyncModel lane: scoreboard semantics/property
+#                       tests plus the per-backend divergence goldens
+#                       (resource-pressure snapshots incl. the copy-storm
+#                       cross-vendor blame divergence)
 
 PY := python
 PYTEST_FLAGS := -x -q
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 quick bench serve-smoke
+.PHONY: tier1 quick bench serve-smoke sync-smoke
 
 tier1:
 	$(PY) -m pytest $(PYTEST_FLAGS)
@@ -26,6 +30,10 @@ quick:
 
 bench:
 	$(PY) -m benchmarks.run
+
+sync-smoke:
+	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_syncmodel.py \
+		tests/test_backend_divergence.py
 
 serve-smoke:
 	$(PY) examples/serve_demo.py

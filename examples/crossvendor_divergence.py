@@ -70,6 +70,26 @@ def main():
               f"{rl.memory_s/max(rl.compute_s,1e-12):>8.2f}x  "
               f"{label} ({native})")
 
+    # §III-E resource pressure: which finite vendor sync resources the
+    # program's async traffic actually consumed (and whether it ever
+    # oversubscribed them — "peak 6/6 in flight" is the strategist's cue).
+    print("\nsync-resource pressure (finite §III-E resources per vendor):")
+    for name, an in per_backend.items():
+        if an.sync_pressure is None:
+            continue
+        used = [p for p in an.sync_pressure.pools if p["acquisitions"]]
+        if not used:
+            print(f"{name:<14s} no async sync traffic")
+            continue
+        cells = []
+        for p in used:
+            cell = f"{p['label']}: peak {p['peak_in_flight']}/{p['capacity']}"
+            if p["evictions"]:
+                cell += (f" — {p['evictions']} oversubscription(s), "
+                         f"{p['contention_cycles']:,.0f} cyc serialized")
+            cells.append(cell)
+        print(f"{name:<14s} " + "; ".join(cells))
+
     print("\nSame HLO, six backends, one parse: the gathered table rows "
           "dominate on\nnarrow-HBM parts (tpu_v5e), collapse toward parity "
           "on fat-HBM parts\n(amd_mi300a, tpu_v5p), and the bottleneck "
@@ -78,6 +98,34 @@ def main():
           "the fix (coalesce/tile the table access) transfers —\n"
           "Observation 2 ('regular access patterns admit portable "
           "optimizations').")
+
+    copy_storm_demo(service)
+
+
+def copy_storm_demo(service) -> None:
+    """The §III-E headline: 8 in-flight async copies oversubscribe some
+    vendors' finite sync resources and sail through others', so the SAME
+    program gets a different top blame class per vendor."""
+    from repro.launch.analysis_server import copy_storm_hlo
+    print("\n--- copy storm: 8 async copies in flight at once ---")
+    print(f"{'backend':<14s} {'resource pool':<28s} {'pressure':<12s} "
+          f"top stall (native)")
+    for name, diag in service.diagnose_fanout(copy_storm_hlo()).items():
+        top = diag.top_stalls[0]["breakdown"]
+        dominant = max(top, key=top.get)
+        used = [p for p in diag.sync_resources["pools"]
+                if p["acquisitions"]]
+        pool = used[0] if used else None
+        label = pool["label"] if pool else "-"
+        pressure = (f"{pool['peak_in_flight']}/{pool['capacity']}"
+                    + ("!" * min(pool["evictions"], 3)) if pool else "-")
+        print(f"{name:<14s} {label:<28s} {pressure:<12s} "
+              f"{dominant} ({diag.stall_taxonomy[dominant]})")
+    print("8 copies > NVIDIA's 6 named barriers and AMD's 2 waitcnt "
+          "counters, but\n< Intel's 16 SWSB tokens and the TPUs' 32 async "
+          "contexts: the contended\nvendors serialize (oldest-(M-N) rule) "
+          "and their diagnosis names the exact\nresource instance consumed "
+          "— three GPU vendors, three top blame classes.")
 
 
 if __name__ == "__main__":

@@ -53,15 +53,21 @@ from .caching import DiskCache, LRUCache
 from .backends import (
     Backend,
     BackendRegistry,
+    DEFAULT_SYNC_MODEL,
     REGISTRY,
+    SyncModel,
+    SyncPressureReport,
+    SyncResourcePool,
+    SyncScoreboard,
     SyncSemantics,
     UnknownBackendError,
     get_backend,
     list_backends,
     register_backend,
     resolve_backend,
+    resolve_sync_model,
 )
-from .blame import BlameResult, attribute_blame
+from .blame import BlameResult, SyncResourceBlame, attribute_blame
 from .cct import build_cct, format_hot_path
 from .collectives import (
     collective_operand_bytes,
@@ -101,6 +107,7 @@ from .passes import (
 )
 from .pruning import prune
 from .report import (
+    MIN_SCHEMA_VERSION,
     SCHEMA_VERSION,
     Diagnosis,
     Recommendation,
@@ -119,15 +126,17 @@ from .sync_trace import add_sync_edges
 __all__ = [
     # service surface (typed requests / serializable diagnoses)
     "AnalyzeRequest", "Diagnosis", "LeoService", "Recommendation",
-    "SCHEMA_VERSION",
+    "MIN_SCHEMA_VERSION", "SCHEMA_VERSION",
     # cache tiers
     "DiskCache", "LRUCache",
     # session facade
     "LeoSession", "SessionStats",
-    # backend registry
-    "Backend", "BackendRegistry", "REGISTRY", "SyncSemantics",
+    # backend registry + sync resources
+    "Backend", "BackendRegistry", "DEFAULT_SYNC_MODEL", "REGISTRY",
+    "SyncModel", "SyncPressureReport", "SyncResourceBlame",
+    "SyncResourcePool", "SyncScoreboard", "SyncSemantics",
     "UnknownBackendError", "get_backend", "list_backends",
-    "register_backend", "resolve_backend",
+    "register_backend", "resolve_backend", "resolve_sync_model",
     # pass pipeline
     "AnalysisContext", "AnalysisPass", "DEFAULT_PIPELINE",
     "IncompletePipelineError", "Pipeline", "PipelineOrderError",

@@ -10,9 +10,11 @@ it ran on one vendor's part:
     :class:`~repro.core.isa.StallClass` buckets back to the vendor-native
     profiler counter names (CUPTI / rocprofiler / Level Zero / TPU xplane),
     so reports can speak each vendor's language;
-  * :class:`SyncSemantics` knobs describing which §III-E synchronization
-    mechanisms the vendor's ISA exposes (named barriers, waitcnt counters,
-    SWSB-style tokens) and how collectives launch.
+  * a :class:`SyncModel` describing the §III-E synchronization resources
+    the vendor's ISA exposes (named barriers, waitcnt counters, SWSB-style
+    tokens) as *finite, named pools* with a stateful scoreboard, plus how
+    collectives launch.  The deprecated :class:`SyncSemantics` knob bag is
+    accepted and converted transparently.
 
 Backends register into a process-global :class:`BackendRegistry`; third
 parties add vendors with :func:`register_backend` without touching core
@@ -27,38 +29,35 @@ from typing import Dict, Iterator, List, Mapping, Optional, Tuple, Union
 
 from ..hwmodel import HardwareModel
 from ..isa import StallClass, SyncKind
-
-
-@dataclass(frozen=True)
-class SyncSemantics:
-    """Vendor synchronization-mechanism knobs (paper §III-E).
-
-    ``mechanisms`` lists which edge-producing sync styles the backend's ISA
-    exposes; the counts parameterize how many independent hardware resources
-    back each style (NVIDIA's B1-B6 named barriers, AMD's vmcnt/lgkmcnt
-    counters, Intel's SWSB scoreboard IDs).  ``async_collectives`` marks
-    whether collective latency is exposed at the *consumer* (async launch)
-    or blocks the issuing stream.
-    """
-
-    mechanisms: Tuple[SyncKind, ...] = (SyncKind.BARRIER, SyncKind.WAITCNT,
-                                        SyncKind.TOKEN)
-    barrier_slots: int = 6        # named-barrier resources (NVIDIA: B1..B6)
-    waitcnt_counters: int = 2     # outstanding-op counters (AMD: vmcnt/lgkmcnt)
-    swsb_tokens: int = 16         # scoreboard token IDs (Intel SWSB: $0..$15)
-    async_collectives: bool = True
+from .syncmodel import (
+    DEFAULT_SYNC_MODEL,
+    SyncAcquire,
+    SyncLike,
+    SyncModel,
+    SyncPressureReport,
+    SyncResourcePool,
+    SyncScoreboard,
+    SyncSemantics,
+    resolve_sync_model,
+)
 
 
 @dataclass(frozen=True)
 class Backend:
-    """One vendor/part descriptor: hardware model + taxonomy + sync knobs."""
+    """One vendor/part descriptor: hardware model + taxonomy + sync model."""
 
     name: str
     vendor: str                               # "google" | "nvidia" | ...
     hw: HardwareModel
     stall_taxonomy: Mapping[StallClass, str]  # unified -> native counter name
-    sync: SyncSemantics = SyncSemantics()
+    sync: SyncModel = DEFAULT_SYNC_MODEL
     description: str = ""
+
+    def __post_init__(self) -> None:
+        # Legacy callers hand us the deprecated SyncSemantics knob bag;
+        # convert so everything downstream sees one behavioral type.
+        if not isinstance(self.sync, SyncModel):
+            object.__setattr__(self, "sync", resolve_sync_model(self.sync))
 
     def native_stall_name(self, cls: StallClass) -> str:
         """Vendor-native profiler name for a unified stall class."""
@@ -174,7 +173,10 @@ GENERIC_TAXONOMY: Mapping[StallClass, str] = {
 from . import amd, intel, nvidia, tpu  # noqa: E402,F401  (registration side effect)
 
 __all__ = [
-    "Backend", "BackendRegistry", "BackendLike", "SyncSemantics",
+    "Backend", "BackendRegistry", "BackendLike",
+    "DEFAULT_SYNC_MODEL", "SyncAcquire", "SyncLike", "SyncModel",
+    "SyncPressureReport", "SyncResourcePool", "SyncScoreboard",
+    "SyncSemantics", "resolve_sync_model",
     "UnknownBackendError", "REGISTRY", "GENERIC_TAXONOMY",
     "register_backend", "get_backend", "list_backends", "resolve_backend",
 ]

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from ..hwmodel import HardwareModel
 from ..isa import StallClass, SyncKind
-from . import Backend, SyncSemantics, register_backend
+from . import Backend, SyncModel, SyncResourcePool, register_backend
 
 AMD_MI300A = HardwareModel(
     name="amd_mi300a",
@@ -26,6 +26,7 @@ AMD_MI300A = HardwareModel(
     collective_setup_cycles=12000.0,  # RCCL launch cost @ 2.1 GHz
     mxu_pipe_depth_cycles=16.0,       # MFMA result latency
     vpu_pipe_depth_cycles=8.0,        # VALU forwarding latency
+    sync_realloc_cycles=6.0,          # s_waitcnt 0 full-drain before reuse
 )
 
 # rocprofiler / GCN wait vocabulary.
@@ -34,6 +35,7 @@ ROCM_TAXONOMY = {
     StallClass.MEM_DEP: "s_waitcnt_vmcnt",
     StallClass.EXEC_DEP: "s_waitcnt_lgkmcnt",
     StallClass.SYNC_WAIT: "s_barrier",
+    StallClass.SYNC_RESOURCE: "s_waitcnt_alias",  # streams sharing a counter
     StallClass.COLLECTIVE_WAIT: "xgmi_wait",
     StallClass.FETCH: "instruction_fetch",
     StallClass.PIPE_BUSY: "mfma_pipe_busy",
@@ -41,11 +43,24 @@ ROCM_TAXONOMY = {
     StallClass.SELF: "other",
 }
 
-AMD_SYNC = SyncSemantics(
-    mechanisms=(SyncKind.WAITCNT, SyncKind.BARRIER),
-    barrier_slots=1,          # single workgroup s_barrier
-    waitcnt_counters=3,       # vmcnt / lgkmcnt / expcnt
-    swsb_tokens=0,
+# Async copies on a GCN-class part are tracked by the two memory waitcnt
+# counters (vmcnt for HBM, lgkmcnt for LDS/scalar; expcnt tracks exports
+# and cannot carry copies), so barrier-style async pairs AND token chains
+# all route onto those two counters — independent streams beyond two alias
+# a counter, and a drain on the shared counter serializes both (§III-E).
+# The single workgroup s_barrier is an execution barrier, not a transfer-
+# tracking resource; it is declared but nothing routes to it.
+AMD_SYNC = SyncModel(
+    pools=(SyncResourcePool(
+               name="waitcnt_counter", kind=SyncKind.WAITCNT,
+               label="s_waitcnt memory counters",
+               instances=("vmcnt", "lgkmcnt")),
+           SyncResourcePool(
+               name="s_barrier", kind=SyncKind.BARRIER,
+               label="workgroup s_barrier", instances=("s_barrier",))),
+    routing={SyncKind.BARRIER: "waitcnt_counter",
+             SyncKind.WAITCNT: "waitcnt_counter",
+             SyncKind.TOKEN: "waitcnt_counter"},
     async_collectives=True,
 )
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from ..hwmodel import HardwareModel
 from ..isa import StallClass, SyncKind
-from . import Backend, SyncSemantics, register_backend
+from . import Backend, SyncModel, SyncResourcePool, register_backend
 
 INTEL_PVC = HardwareModel(
     name="intel_pvc",
@@ -27,6 +27,7 @@ INTEL_PVC = HardwareModel(
     collective_setup_cycles=16000.0,  # oneCCL launch @ 1.6 GHz
     mxu_pipe_depth_cycles=8.0,        # XMX systolic depth (8-deep)
     vpu_pipe_depth_cycles=10.0,
+    sync_realloc_cycles=2.0,          # SBID release is a cheap sync.allrd
 )
 
 # Level Zero / GTPin stall vocabulary (SWSB scoreboard waits).
@@ -35,6 +36,7 @@ LEVELZERO_TAXONOMY = {
     StallClass.MEM_DEP: "sbid_wait_load",
     StallClass.EXEC_DEP: "swsb_dist_wait",
     StallClass.SYNC_WAIT: "sync_func_wait",
+    StallClass.SYNC_RESOURCE: "sbid_alloc_wait",  # SBID reuse serialization
     StallClass.COLLECTIVE_WAIT: "xelink_wait",
     StallClass.FETCH: "instruction_fetch",
     StallClass.PIPE_BUSY: "pipe_stall",
@@ -42,11 +44,22 @@ LEVELZERO_TAXONOMY = {
     StallClass.SELF: "other",
 }
 
-INTEL_SYNC = SyncSemantics(
-    mechanisms=(SyncKind.TOKEN, SyncKind.BARRIER),
-    barrier_slots=32,         # named barriers per subslice
-    waitcnt_counters=0,
-    swsb_tokens=16,           # SWSB scoreboard IDs $0..$15
+# Every in-flight async operation on a Xe-class part claims one of the 16
+# SWSB scoreboard IDs; the compiler spills to serialization only past $15,
+# so a copy storm that chokes NVIDIA's 6 named barriers sails through here
+# (the cross-vendor divergence the §VI case study reports).  The 32
+# per-subslice named barriers exist but carry execution barriers, not
+# transfer tracking.
+INTEL_SYNC = SyncModel(
+    pools=(SyncResourcePool.counted(
+               "swsb_token", SyncKind.TOKEN, "SWSB scoreboard IDs $0-$15",
+               "$", 16),
+           SyncResourcePool.counted(
+               "named_barrier", SyncKind.BARRIER,
+               "subslice named barriers", "nbar", 32)),
+    routing={SyncKind.BARRIER: "swsb_token",
+             SyncKind.WAITCNT: "swsb_token",
+             SyncKind.TOKEN: "swsb_token"},
     async_collectives=False,  # oneCCL collectives block the queue
 )
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from ..hwmodel import HardwareModel
 from ..isa import StallClass, SyncKind
-from . import Backend, SyncSemantics, register_backend
+from . import Backend, SyncModel, SyncResourcePool, register_backend
 
 NVIDIA_GH200 = HardwareModel(
     name="nvidia_gh200",
@@ -27,6 +27,7 @@ NVIDIA_GH200 = HardwareModel(
     collective_setup_cycles=9000.0,  # NCCL kernel launch ~5us @ 1.8 GHz
     mxu_pipe_depth_cycles=32.0,      # tensor-core result latency
     vpu_pipe_depth_cycles=24.0,      # dependent-issue ALU latency
+    sync_realloc_cycles=8.0,         # bar.sync drain before slot reuse
 )
 
 # CUPTI PC-sampling stall reasons (§II-D table).
@@ -35,6 +36,7 @@ CUPTI_TAXONOMY = {
     StallClass.MEM_DEP: "long_scoreboard",
     StallClass.EXEC_DEP: "short_scoreboard",
     StallClass.SYNC_WAIT: "barrier",
+    StallClass.SYNC_RESOURCE: "barrier_alloc",   # named-barrier slot reuse
     StallClass.COLLECTIVE_WAIT: "membar",
     StallClass.FETCH: "no_instruction",
     StallClass.PIPE_BUSY: "math_pipe_throttle",
@@ -42,11 +44,16 @@ CUPTI_TAXONOMY = {
     StallClass.SELF: "misc",
 }
 
-NVIDIA_SYNC = SyncSemantics(
-    mechanisms=(SyncKind.BARRIER, SyncKind.TOKEN),
-    barrier_slots=6,          # named barriers B1..B6
-    waitcnt_counters=0,       # no s_waitcnt-style counters
-    swsb_tokens=0,
+# Every §III-E mechanism the unified IR records rides the B1-B6 named
+# barriers on an NVIDIA-class part: 7+ async copies in flight oversubscribe
+# and serialize (the paper's oldest-(M-N) rule).
+NVIDIA_SYNC = SyncModel(
+    pools=(SyncResourcePool.counted(
+        "named_barrier", SyncKind.BARRIER, "named barriers B1-B6",
+        "B", 6, start=1),),
+    routing={SyncKind.BARRIER: "named_barrier",
+             SyncKind.WAITCNT: "named_barrier",
+             SyncKind.TOKEN: "named_barrier"},
     async_collectives=True,   # NCCL on copy engines / SM subsets
 )
 

@@ -8,13 +8,14 @@ from __future__ import annotations
 
 from ..hwmodel import TPU_V4, TPU_V5E, TPU_V5P
 from ..isa import StallClass, SyncKind
-from . import Backend, SyncSemantics, register_backend
+from . import Backend, SyncModel, SyncResourcePool, register_backend
 
 TPU_TAXONOMY = {
     StallClass.NONE: "idle",
     StallClass.MEM_DEP: "hbm_wait",
     StallClass.EXEC_DEP: "scalar_pipeline_wait",
     StallClass.SYNC_WAIT: "dma_semaphore_wait",
+    StallClass.SYNC_RESOURCE: "dma_slot_wait",   # async context exhausted
     StallClass.COLLECTIVE_WAIT: "ici_wait",
     StallClass.FETCH: "program_fetch",
     StallClass.PIPE_BUSY: "mxu_occupied",
@@ -22,13 +23,23 @@ TPU_TAXONOMY = {
     StallClass.SELF: "self",
 }
 
-# TPUs expose all three §III-E mechanisms through XLA/Pallas: async start/
-# done pairs, DMA semaphores, and token threading.
-TPU_SYNC = SyncSemantics(
-    mechanisms=(SyncKind.BARRIER, SyncKind.WAITCNT, SyncKind.TOKEN),
-    barrier_slots=32,        # async copy/collective contexts
-    waitcnt_counters=16,     # Pallas DMA semaphores
-    swsb_tokens=8,           # XLA token values in flight
+# TPUs expose all three §III-E mechanisms through XLA/Pallas, each backed
+# by its own finite pool: async start/done pairs ride per-core async copy
+# contexts, Pallas DMA streams ride hardware semaphores, and token threads
+# ride in-flight token registers.  Routing is the identity — TPU is the
+# only backend where no mechanism is emulated on another's resource.
+TPU_SYNC = SyncModel(
+    pools=(SyncResourcePool.counted(
+               "async_context", SyncKind.BARRIER, "async copy contexts",
+               "ctx", 32),
+           SyncResourcePool.counted(
+               "dma_semaphore", SyncKind.WAITCNT, "Pallas DMA semaphores",
+               "sem", 16),
+           SyncResourcePool.counted(
+               "token_slot", SyncKind.TOKEN, "XLA token slots", "tok", 8)),
+    routing={SyncKind.BARRIER: "async_context",
+             SyncKind.WAITCNT: "dma_semaphore",
+             SyncKind.TOKEN: "token_slot"},
     async_collectives=True,
 )
 

@@ -36,8 +36,9 @@ def edge_stall_classes(edge: Edge, producer: Instruction) -> Tuple[StallClass, .
     if edge.kind.is_sync:
         if producer.comm_bytes > 0 or producer.op_class is OpClass.COLLECTIVE:
             return (StallClass.COLLECTIVE_WAIT, StallClass.SYNC_WAIT,
-                    StallClass.MEM_DEP)
-        return (StallClass.SYNC_WAIT, StallClass.MEM_DEP)
+                    StallClass.SYNC_RESOURCE, StallClass.MEM_DEP)
+        return (StallClass.SYNC_WAIT, StallClass.SYNC_RESOURCE,
+                StallClass.MEM_DEP)
     cls = producer.op_class
     if cls in (OpClass.MEMORY_LOAD, OpClass.MEMORY_STORE,
                OpClass.DATA_MOVEMENT, OpClass.PARAMETER, OpClass.CONSTANT):
@@ -46,7 +47,8 @@ def edge_stall_classes(edge: Edge, producer: Instruction) -> Tuple[StallClass, .
                                      producer.comm_bytes > 0):
         return (StallClass.COLLECTIVE_WAIT, StallClass.SYNC_WAIT)
     if cls in (OpClass.SYNC_SET, OpClass.SYNC_WAIT):
-        return (StallClass.SYNC_WAIT, StallClass.MEM_DEP)
+        return (StallClass.SYNC_WAIT, StallClass.SYNC_RESOURCE,
+                StallClass.MEM_DEP)
     return (StallClass.EXEC_DEP,)
 
 
@@ -89,6 +91,18 @@ class SelfBlame:
 
 
 @dataclass
+class SyncResourceBlame:
+    """One §III-E resource-oversubscription event: `consumer` serialized on
+    physical instance `resource` (pool `pool`) still held by `holder`."""
+
+    consumer: str
+    resource: str      # concrete instance, e.g. "B3" / "vmcnt" / "$5"
+    pool: str          # pool name, e.g. "named_barrier"
+    holder: str        # qualified instruction that held the instance
+    cycles: float
+
+
+@dataclass
 class BlameResult:
     entries: List[BlameEntry] = field(default_factory=list)
     by_producer: Dict[str, float] = field(default_factory=dict)
@@ -98,6 +112,11 @@ class BlameResult:
     # wait on — the bottleneck is itself).  Kept separate from self_blame so
     # stall-cycle conservation (sum(entries)+sum(self)==total stalls) holds.
     occupancy_blame: List[SelfBlame] = field(default_factory=list)
+    # SYNC_RESOURCE evidence channel: scoreboard oversubscription events
+    # naming the exact resource instance consumed.  Evidence *about* stall
+    # cycles already attributed through entries/self_blame (the same cycles
+    # viewed through the resource lens), so conservation still holds.
+    sync_resource: List[SyncResourceBlame] = field(default_factory=list)
 
     @property
     def total_attributed(self) -> float:
@@ -115,6 +134,7 @@ _SELF_SUBCATEGORY = {
     StallClass.MEM_DEP: "memory latency",
     StallClass.EXEC_DEP: "compute saturation",
     StallClass.SYNC_WAIT: "synchronization overhead",
+    StallClass.SYNC_RESOURCE: "sync resource exhaustion",
     StallClass.COLLECTIVE_WAIT: "collective wait",
     StallClass.FETCH: "instruction fetch",
     StallClass.PIPE_BUSY: "pipeline contention",
@@ -152,7 +172,22 @@ class BlameAttributor:
                 continue
             self._attribute(result, qualified, rec.latency_samples, edges)
         self._occupancy_blame(result)
+        self._sync_resource_blame(result)
         return result
+
+    def _sync_resource_blame(self, result: BlameResult) -> None:
+        """Surface scoreboard oversubscription events (§III-E) as a typed
+        evidence channel naming the exact resource instance consumed."""
+        pressure = getattr(self.profile, "sync_pressure", None)
+        if pressure is None:
+            return
+        for pool in pressure.pools:
+            for ev in pool.get("events", []):
+                result.sync_resource.append(SyncResourceBlame(
+                    consumer=ev["consumer"], resource=ev["instance"],
+                    pool=pool["pool"], holder=ev.get("holder") or "",
+                    cycles=ev["stall_cycles"] * ev.get("weight", 1.0)))
+        result.sync_resource.sort(key=lambda b: -b.cycles)
 
     def _occupancy_blame(self, result: BlameResult) -> None:
         """Diagnose issue-stream dominators with no dependency stalls."""

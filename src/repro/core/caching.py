@@ -14,6 +14,12 @@ Two building blocks:
     process* re-run an analysis with zero HLO parses (asserted in
     ``tests/test_service.py``).
 
+The disk tier supports bounded growth: ``max_bytes`` caps the total
+artifact size (oldest-accessed evicted first; hits refresh mtime so the
+policy is LRU-ish across processes) and ``ttl_seconds`` expires idle
+artifacts.  A sweep runs opportunistically every ``sweep_interval``
+writes — ``<outdir>/.leo_cache`` no longer grows without bound.
+
 Writes are atomic (tmp file + ``os.replace``), so concurrent writers on
 the same key are safe: last writer wins with an intact artifact either
 way.
@@ -26,8 +32,10 @@ import os
 import pickle
 import tempfile
 import threading
+import time
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Iterator, MutableMapping, Optional
+from typing import Any, Callable, Dict, Iterator, List, MutableMapping, \
+    Optional, Tuple
 
 #: Bump when the pickled Module layout changes incompatibly; stale
 #: artifacts are treated as misses, never as errors.
@@ -93,6 +101,9 @@ class DiskCacheStats:
         self.diagnosis_hits = 0
         self.diagnosis_misses = 0
         self.writes = 0
+        self.sweeps = 0
+        self.evictions = 0          # artifacts removed by cap or TTL
+        self.bytes_evicted = 0
 
     def bump(self, field: str, by: int = 1) -> None:
         with self._lock:
@@ -105,6 +116,9 @@ class DiskCacheStats:
             "diagnosis_hits": self.diagnosis_hits,
             "diagnosis_misses": self.diagnosis_misses,
             "writes": self.writes,
+            "sweeps": self.sweeps,
+            "evictions": self.evictions,
+            "bytes_evicted": self.bytes_evicted,
         }
 
 
@@ -115,14 +129,40 @@ class DiskCache:
     ``module_key`` / the service's diagnosis key), so identical content
     always lands on the same path regardless of which process wrote it.
     Corrupt or format-incompatible artifacts read as misses.
+
+    ``max_bytes`` / ``ttl_seconds`` bound the tier: a sweep (every
+    ``sweep_interval`` writes, or on explicit :meth:`sweep`) first drops
+    artifacts idle longer than the TTL, then removes oldest-accessed
+    artifacts until the total size fits the cap.  Hits refresh the
+    artifact mtime (best-effort), so eviction order approximates LRU even
+    across processes.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, max_bytes: Optional[int] = None,
+                 ttl_seconds: Optional[float] = None,
+                 sweep_interval: int = 64):
         self.root = os.path.abspath(root)
+        self.max_bytes = max_bytes
+        self.ttl_seconds = ttl_seconds
+        self.sweep_interval = max(1, sweep_interval)
         self.stats = DiskCacheStats()
+        # _counter_lock guards only the cheap write counter; _sweep_lock
+        # serializes sweeps.  Writers never block behind a running sweep —
+        # they bump the counter and move on (a due sweep that finds the
+        # lock taken is simply skipped; the next due write retries).
+        self._counter_lock = threading.Lock()
+        self._sweep_lock = threading.Lock()
+        self._writes_since_sweep = 0
 
     def _path(self, kind: str, key: str, ext: str) -> str:
         return os.path.join(self.root, kind, key[:2], f"{key}{ext}")
+
+    @staticmethod
+    def _touch(path: str) -> None:
+        try:
+            os.utime(path, None)
+        except OSError:
+            pass
 
     def _write_atomic(self, path: str, payload: bytes) -> None:
         os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -139,6 +179,15 @@ class DiskCache:
                 pass
             raise
         self.stats.bump("writes")
+        if self.max_bytes is None and self.ttl_seconds is None:
+            return
+        with self._counter_lock:
+            self._writes_since_sweep += 1
+            due = self._writes_since_sweep >= self.sweep_interval
+            if due:
+                self._writes_since_sweep = 0
+        if due:
+            self.sweep(blocking=False)
 
     # -- parsed modules (gzipped pickle) ---------------------------------------
 
@@ -155,6 +204,7 @@ class DiskCache:
             self.stats.bump("module_misses")
             return None
         self.stats.bump("module_hits")
+        self._touch(path)   # refresh LRU position for the sweeper
         return module
 
     def store_module(self, key: str, module: Any) -> None:
@@ -167,18 +217,20 @@ class DiskCache:
     # -- diagnoses (gzipped JSON) ----------------------------------------------
 
     def load_diagnosis(self, key: str):
-        from .report import Diagnosis, SCHEMA_VERSION
+        from .report import Diagnosis
         path = self._path("diagnoses", key, ".json.gz")
         try:
             with gzip.open(path, "rt", encoding="utf-8") as f:
                 data = json.load(f)
-            if data.get("schema_version") != SCHEMA_VERSION:
-                raise ValueError("stale diagnosis schema")
+            # from_dict migrates any supported older schema generation
+            # forward (e.g. v1 payloads gain an explicit "not recorded"
+            # sync_resources default) and rejects unknown generations.
             diag = Diagnosis.from_dict(data)
         except (OSError, ValueError, KeyError, TypeError):
             self.stats.bump("diagnosis_misses")
             return None
         self.stats.bump("diagnosis_hits")
+        self._touch(path)
         return diag
 
     def store_diagnosis(self, key: str, diagnosis: Any) -> None:
@@ -187,6 +239,74 @@ class DiskCache:
             gzip.compress(diagnosis.to_json().encode("utf-8")))
 
     # -- maintenance -----------------------------------------------------------
+
+    def _artifacts(self) -> List[Tuple[float, int, str]]:
+        """(mtime, size, path) for every stored artifact."""
+        out: List[Tuple[float, int, str]] = []
+        for kind in ("modules", "diagnoses"):
+            base = os.path.join(self.root, kind)
+            for dirpath, _, files in os.walk(base):
+                for name in files:
+                    if not name.endswith(".gz"):
+                        continue
+                    path = os.path.join(dirpath, name)
+                    try:
+                        st = os.stat(path)
+                    except OSError:
+                        continue
+                    out.append((st.st_mtime, st.st_size, path))
+        return out
+
+    def _evict(self, path: str, size: int) -> bool:
+        try:
+            os.unlink(path)
+        except OSError:
+            return False
+        self.stats.bump("evictions")
+        self.stats.bump("bytes_evicted", size)
+        return True
+
+    def total_bytes(self) -> int:
+        return sum(size for _, size, _ in self._artifacts())
+
+    def sweep(self, now: Optional[float] = None,
+              blocking: bool = True) -> Dict[str, int]:
+        """TTL-expire idle artifacts, then enforce the size cap
+        oldest-accessed first.  Safe to call concurrently / cross-process:
+        a racing unlink simply counts as someone else's eviction.  With
+        ``blocking=False`` (the opportunistic write-path mode), a sweep
+        already in progress is skipped instead of waited on."""
+        if self.max_bytes is None and self.ttl_seconds is None:
+            return {"evicted": 0, "bytes_freed": 0}
+        if not self._sweep_lock.acquire(blocking=blocking):
+            return {"evicted": 0, "bytes_freed": 0, "skipped": 1}
+        now = time.time() if now is None else now
+        evicted = freed = 0
+        try:
+            self.stats.bump("sweeps")
+            artifacts = sorted(self._artifacts())   # oldest mtime first
+            if self.ttl_seconds is not None:
+                cutoff = now - self.ttl_seconds
+                keep: List[Tuple[float, int, str]] = []
+                for mtime, size, path in artifacts:
+                    if mtime < cutoff and self._evict(path, size):
+                        evicted += 1
+                        freed += size
+                    else:
+                        keep.append((mtime, size, path))
+                artifacts = keep
+            if self.max_bytes is not None:
+                total = sum(size for _, size, _ in artifacts)
+                for mtime, size, path in artifacts:
+                    if total <= self.max_bytes:
+                        break
+                    if self._evict(path, size):
+                        evicted += 1
+                        freed += size
+                        total -= size
+        finally:
+            self._sweep_lock.release()
+        return {"evicted": evicted, "bytes_freed": freed}
 
     def clear(self) -> None:
         import shutil

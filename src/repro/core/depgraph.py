@@ -52,6 +52,10 @@ class Edge:
     kind: EdgeKind
     paths: List[PathInfo] = field(default_factory=list)
     pruned_by: Optional[str] = None   # pruning stage that removed it, if any
+    # Concrete §III-E sync-resource instance this edge rode (e.g. "B3",
+    # "vmcnt", "$5"); set by sync_trace when the backend carries a
+    # SyncModel, None for register/predicate/loop edges.
+    resource: Optional[str] = None
 
     @property
     def alive(self) -> bool:

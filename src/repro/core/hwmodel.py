@@ -37,6 +37,12 @@ class HardwareModel:
     collective_setup_cycles: float  # per-collective launch latency
     mxu_pipe_depth_cycles: float = 64.0   # systolic-array fill/drain latency
     vpu_pipe_depth_cycles: float = 16.0   # vector-unit pipeline latency
+    # Cost to recycle an exhausted synchronization resource (§III-E): when a
+    # kernel holds more async transfers in flight than the part has barrier
+    # slots / waitcnt counters / SWSB tokens, the oversubscribing
+    # instruction serializes against the oldest holder and pays this
+    # additional drain/re-arm latency on top of the holder's remaining time.
+    sync_realloc_cycles: float = 4.0
 
     @property
     def ici_bw_total(self) -> float:

@@ -43,6 +43,9 @@ class StallClass(enum.Enum):
     MEM_DEP = "mem_dep"                  # waiting on an HBM access
     EXEC_DEP = "exec_dep"                # waiting on a compute producer
     SYNC_WAIT = "sync_wait"              # waiting at an explicit sync (async-done)
+    SYNC_RESOURCE = "sync_resource"      # finite sync resource exhausted
+                                         # (barrier slot / waitcnt counter /
+                                         # SWSB token oversubscription §III-E)
     COLLECTIVE_WAIT = "collective_wait"  # waiting on inter-chip communication
     FETCH = "fetch"                      # instruction fetch / program order
     PIPE_BUSY = "pipe_busy"              # execution resource busy (throughput bound)
@@ -339,5 +342,9 @@ STALL_COMPATIBLE_PRODUCERS: Dict[StallClass, Tuple[OpClass, ...]] = {
     StallClass.SYNC_WAIT: (
         OpClass.SYNC_SET, OpClass.SYNC_WAIT, OpClass.COLLECTIVE,
         OpClass.MEMORY_LOAD, OpClass.MEMORY_STORE,
+    ),
+    StallClass.SYNC_RESOURCE: (
+        OpClass.SYNC_SET, OpClass.SYNC_WAIT, OpClass.COLLECTIVE,
+        OpClass.MEMORY_LOAD, OpClass.MEMORY_STORE, OpClass.DATA_MOVEMENT,
     ),
 }

@@ -57,6 +57,11 @@ class LeoAnalysis:
     analysis_seconds: float = 0.0
     backend: Optional[Backend] = None
     pass_seconds: Dict[str, float] = field(default_factory=dict)
+    # Per-pool §III-E sync-resource pressure (SyncPressureReport): dynamic
+    # scoreboard stats from the sampler merged with per-instance sync-edge
+    # counts from the sync_edges pass; None when the pipeline ran without
+    # the sync_edges pass or the backend declares no resource pools.
+    sync_pressure: Optional[Any] = None
 
     @property
     def estimated_step_seconds(self) -> float:
@@ -126,6 +131,7 @@ class AnalysisContext:
     coverage_before: Optional[CoverageReport] = None
     coverage_after: Optional[CoverageReport] = None
     sync_edges_added: Optional[int] = None
+    sync_pressure: Optional[Any] = None
     prune_stats: Optional[PruneStats] = None
     blame: Optional[BlameResult] = None
     chains: Optional[List[StallChain]] = None
@@ -156,7 +162,8 @@ class AnalysisContext:
             coverage_after=self.coverage_after, cct=self.cct,
             sync_edges_added=self.sync_edges_added or 0,
             analysis_seconds=analysis_seconds, backend=self.backend,
-            pass_seconds={s.name: s.seconds for s in self.pass_stats})
+            pass_seconds={s.name: s.seconds for s in self.pass_stats},
+            sync_pressure=self.sync_pressure)
 
 
 class PipelineOrderError(ValueError):
@@ -236,14 +243,40 @@ class CoverageSnapshotPass(AnalysisPass):
 
 
 class SyncEdgesPass(AnalysisPass):
-    """Phase 3b: §III-E synchronization edges (barrier / waitcnt / token)."""
+    """Phase 3b: §III-E synchronization edges (barrier / waitcnt / token).
+
+    With a backend ``SyncModel``, every sync edge is annotated with the
+    concrete resource instance it consumed, and the pass exports
+    ``sync_pressure``: the sampler's dynamic scoreboard report (peak
+    in-flight, oversubscription events) extended with per-instance
+    sync-edge counts."""
 
     name = "sync_edges"
     requires = ("graph",)
-    provides = ("sync_edges_added",)
+    provides = ("sync_edges_added", "sync_pressure")
 
     def run(self, ctx: AnalysisContext) -> None:
-        ctx.sync_edges_added = add_sync_edges(ctx.graph)
+        sync = getattr(ctx.backend, "sync", None)
+        ctx.sync_edges_added = add_sync_edges(ctx.graph, sync=sync)
+        ctx.sync_pressure = self._pressure_report(ctx, sync)
+
+    def _pressure_report(self, ctx: AnalysisContext, sync):
+        if sync is None or not getattr(sync, "pools", ()):
+            return None
+        report = getattr(ctx.profile, "sync_pressure", None) \
+            if ctx.profile is not None else None
+        if report is None:
+            # measured profile (or sample pass removed): static-only view
+            report = sync.scoreboard().report()
+        by_instance: Dict[str, int] = {}
+        for e in ctx.graph.edges:
+            if e.kind.is_sync and e.resource is not None:
+                by_instance[e.resource] = by_instance.get(e.resource, 0) + 1
+        for pool in report.pools:
+            pool["edges_per_instance"] = {
+                inst: by_instance[inst] for inst in pool["instances"]
+                if inst in by_instance}
+        return report
 
 
 class PrunePass(AnalysisPass):

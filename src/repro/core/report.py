@@ -43,8 +43,21 @@ from .passes import LeoAnalysis
 from .isa import EdgeKind, Instruction, OpClass, StallClass
 
 #: Version stamped into every serialized Diagnosis / AnalyzeRequest; readers
-#: reject (treat as cache miss) payloads from a different schema generation.
-SCHEMA_VERSION = 1
+#: reject (treat as cache miss) payloads from a newer schema generation.
+#: v2 added the ``sync_resources`` section (§III-E finite sync-resource
+#: pressure); v1 payloads are still readable — ``from_dict`` migrates them
+#: with an explicit "not recorded" default, so a warm disk cache survives
+#: the bump.
+SCHEMA_VERSION = 2
+
+#: Oldest payload generation ``Diagnosis.from_dict`` can migrate forward.
+MIN_SCHEMA_VERSION = 1
+
+#: The ``sync_resources`` default filled into migrated pre-v2 payloads.
+SYNC_RESOURCES_NOT_RECORDED = {
+    "recorded": False,
+    "note": "not recorded (schema version 1 payload)",
+}
 
 
 def _deprecated(old: str, new: str) -> None:
@@ -195,6 +208,11 @@ class Diagnosis:
     recommendations: List[Recommendation] = field(default_factory=list)
     vendor: Optional[str] = None
     stall_taxonomy: Optional[Dict[str, str]] = None
+    # §III-E finite sync-resource pressure (schema v2): per-pool capacity /
+    # peak-in-flight / oversubscription events naming concrete resource
+    # instances, or {"recorded": False, ...} when the analysis carried none.
+    sync_resources: Dict[str, Any] = field(
+        default_factory=lambda: dict(SYNC_RESOURCES_NOT_RECORDED))
     schema_version: int = SCHEMA_VERSION
 
     # -- construction ----------------------------------------------------------
@@ -241,6 +259,15 @@ class Diagnosis:
                     backend.native_stall_name(k): v
                     for k, v in rec.stall_breakdown.items()}
             stalls.append(entry)
+        sync_resources: Dict[str, Any] = dict(SYNC_RESOURCES_NOT_RECORDED)
+        pressure = getattr(analysis, "sync_pressure", None)
+        if pressure is not None:
+            sync_resources = {"recorded": True}
+            sync_resources.update(pressure.to_dict())
+            sync_resources["blame"] = [
+                {"consumer": b.consumer, "resource": b.resource,
+                 "pool": b.pool, "holder": b.holder, "cycles": b.cycles}
+                for b in getattr(analysis.blame, "sync_resource", [])[:10]]
         return cls(
             backend=analysis.hw.name,
             module_name=analysis.module.name,
@@ -268,6 +295,7 @@ class Diagnosis:
             vendor=backend.vendor if backend is not None else None,
             stall_taxonomy=(backend.taxonomy_table()
                             if backend is not None else None),
+            sync_resources=sync_resources,
         )
 
     # -- serialization ---------------------------------------------------------
@@ -298,6 +326,7 @@ class Diagnosis:
             "root_cause_chains": self.chains,
             "root_causes": self.root_causes,
             "self_blame": self.self_blame,
+            "sync_resources": self.sync_resources,
             "recommendations": [r.to_dict() for r in self.recommendations],
         })
         return out
@@ -305,9 +334,16 @@ class Diagnosis:
     @classmethod
     def from_dict(cls, data: Dict[str, Any]) -> "Diagnosis":
         version = data.get("schema_version", 0)
-        if version != SCHEMA_VERSION:
+        if not (MIN_SCHEMA_VERSION <= version <= SCHEMA_VERSION):
             raise ValueError(
-                f"Diagnosis schema_version {version} != {SCHEMA_VERSION}")
+                f"Diagnosis schema_version {version} outside supported "
+                f"range [{MIN_SCHEMA_VERSION}, {SCHEMA_VERSION}]")
+        # Graceful migration: v1 payloads (pre-sync_resources) read fine —
+        # a warm disk cache survives the schema bump with an explicit
+        # "not recorded" default instead of a reject.
+        sync_resources = data.get("sync_resources")
+        if sync_resources is None:
+            sync_resources = dict(SYNC_RESOURCES_NOT_RECORDED)
         cov = data.get("single_dependency_coverage", {})
         return cls(
             backend=data["backend"],
@@ -325,7 +361,8 @@ class Diagnosis:
                              for r in data.get("recommendations", [])],
             vendor=data.get("vendor"),
             stall_taxonomy=data.get("stall_taxonomy"),
-            schema_version=version,
+            sync_resources=sync_resources,
+            schema_version=SCHEMA_VERSION,
         )
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -347,6 +384,31 @@ class Diagnosis:
             f.write(self.to_json(indent=2))
 
     # -- presentation ----------------------------------------------------------
+
+    def _sync_resource_lines(self) -> List[str]:
+        """Human-readable §III-E resource-pressure lines ("barrier slots
+        6/6 in flight at peak") shared by the markdown and LLM views."""
+        sr = self.sync_resources or {}
+        if not sr.get("recorded"):
+            return []
+        lines: List[str] = []
+        for pool in sr.get("pools", []):
+            if not pool.get("acquisitions"):
+                continue
+            line = (f"{pool.get('label', pool.get('pool', '?'))}: peak "
+                    f"{pool.get('peak_in_flight', 0)}/"
+                    f"{pool.get('capacity', 0)} in flight")
+            if pool.get("evictions"):
+                line += (f", {pool['evictions']} oversubscription event(s)"
+                         f", {pool.get('contention_cycles', 0.0):,.0f} "
+                         f"serialized stall cycles")
+            lines.append(line)
+        for b in sr.get("blame", [])[:3]:
+            lines.append(
+                f"`{b['consumer']}` serialized on {b['pool']} instance "
+                f"`{b['resource']}` held by `{b['holder']}` "
+                f"({b['cycles']:,.0f} cycles)")
+        return lines
 
     def to_markdown(self) -> str:
         """Human-readable report (the profiler-UI rendering)."""
@@ -376,6 +438,10 @@ class Diagnosis:
                 lines.append(f"### Chain {i+1} "
                              f"({chain['stall_cycles']:,.0f} stall cycles)")
                 lines += ["```", chain.get("text", ""), "```"]
+        sync_lines = self._sync_resource_lines()
+        if sync_lines:
+            lines += ["", "## Sync-resource pressure (§III-E)", ""]
+            lines += [f"- {l}" for l in sync_lines]
         if self.recommendations:
             lines += ["", "## Recommendations", ""]
             for r in self.recommendations:
@@ -407,6 +473,10 @@ class Diagnosis:
                 lines.append(f"Chain {i+1} "
                              f"({chain['stall_cycles']:,.0f} stall cycles):")
                 lines.append(chain.get("text", ""))
+            sync_lines = self._sync_resource_lines()
+            if sync_lines:
+                lines.append("#### Vendor sync-resource pressure")
+                lines += [f"- {l}" for l in sync_lines]
             lines.append("#### Recommendations")
             for r in self.recommendations:
                 lines.append(f"- [{r.action}] {r.reason} "

@@ -97,6 +97,10 @@ class StallProfile:
     records: Dict[str, PCSampleRecord] = field(default_factory=dict)
     makespan_cycles: float = 0.0
     clock_hz: float = 1e9
+    # Per-pool §III-E resource pressure (SyncPressureReport) when the
+    # profile was produced by a sampler driving a SyncModel scoreboard;
+    # None for measured profiles and sync-less backends.
+    sync_pressure: Optional[object] = None
 
     @property
     def makespan_seconds(self) -> float:
@@ -127,20 +131,32 @@ class VirtualSampler:
     def __init__(self, module: Module, hw: HardwareModel, sync=None):
         self.module = module
         self.hw = hw
-        # Optional backend SyncSemantics (duck-typed to avoid an import
-        # cycle with repro.core.backends).  Only the async_collectives knob
-        # is behavioral today: vendors whose collectives block the issuing
-        # queue (e.g. queue-ordered oneCCL) pay the transfer latency at
-        # *issue* instead of at the consumer.
+        # Optional backend SyncModel (duck-typed to avoid an import cycle
+        # with repro.core.backends).  Two behaviors: the async_collectives
+        # knob (vendors whose collectives block the issuing queue, e.g.
+        # queue-ordered oneCCL, pay the transfer latency at *issue*), and —
+        # when the model carries resource pools — a stateful scoreboard
+        # that serializes oversubscribed sync resources (§III-E): an async
+        # start with every barrier slot / waitcnt counter / SWSB token in
+        # flight inherits the oldest holder's remaining latency, recorded
+        # as SYNC_RESOURCE stall cycles.
         self.sync = sync
+        self.scoreboard = None
+        if sync is not None and hasattr(sync, "scoreboard") \
+                and getattr(sync, "pools", ()):
+            self.scoreboard = sync.scoreboard(
+                realloc_cycles=getattr(hw, "sync_realloc_cycles", 0.0))
 
     # -- public ---------------------------------------------------------------
 
     def run(self) -> StallProfile:
         profile = StallProfile(hw_name=self.hw.name, clock_hz=self.hw.clock_hz)
         entry = self.module.entry_computation
-        makespan = self._simulate(entry, 0.0, {}, 1.0, profile, depth=0)
+        makespan = self._simulate(entry, 0.0, {}, 1.0, profile, depth=0,
+                                  board=self.scoreboard)
         profile.makespan_cycles = makespan
+        if self.scoreboard is not None:
+            profile.sync_pressure = self.scoreboard.report()
         self._seed_unsampled(profile)
         return profile
 
@@ -148,7 +164,8 @@ class VirtualSampler:
 
     def _simulate(self, comp, t0: float, env: Dict[str, float], mult: float,
                   profile: StallProfile, depth: int,
-                  loop_ctx: Optional[Dict[int, float]] = None) -> float:
+                  loop_ctx: Optional[Dict[int, float]] = None,
+                  board=None) -> float:
         """Simulate one computation; returns its end time (cycles)."""
         if depth > 32:
             return t0
@@ -165,22 +182,63 @@ class VirtualSampler:
 
             ready, blocker = self._ready_time(comp, instr, local_env, params,
                                               loop_ctx, t0)
-            issue_at = max(t, ready)
+            data_ready = max(t, ready)
+            res_ready, res_blocker, acquired = self._acquire_sync(
+                board, instr, q, data_ready, mult)
+            issue_at = max(data_ready, res_ready)
             stall = issue_at - t
             rec = profile.record(q)
             rec.exec_count += mult
             issue_cost = self._issue_cycles(instr, env, profile, issue_at,
-                                            mult, depth)
+                                            mult, depth, board)
             rec.total_samples += mult * (stall + issue_cost)
-            if stall > 0:
+            data_stall = data_ready - t
+            if data_stall > 0:
                 cls = classify_blocker(instr, blocker)
-                rec.add_stall(cls, mult * stall,
+                rec.add_stall(cls, mult * data_stall,
                               blocker.qualified_name if blocker else None)
-            local_env[q] = issue_at + self._latency_cycles(instr, env, profile,
-                                                           issue_at, mult,
-                                                           depth)
+            res_stall = issue_at - data_ready
+            if res_stall > 0:
+                rec.add_stall(StallClass.SYNC_RESOURCE, mult * res_stall,
+                              res_blocker)
+            completion = issue_at + self._latency_cycles(instr, env, profile,
+                                                         issue_at, mult,
+                                                         depth)
+            local_env[q] = completion
+            for kind, tag in acquired:
+                board.complete(kind, tag, completion)
             t = issue_at + issue_cost
         return t
+
+    def _acquire_sync(self, board, instr: Instruction, q: str, now: float,
+                      mult: float):
+        """Retire waited resources and claim set ones on the scoreboard.
+
+        Returns (resource_ready, blocking holder qualified-name or None,
+        [(kind, tag)] acquired — their completion is noted once known)."""
+        si = instr.sync
+        if board is None or si.kind is None:
+            return now, None, ()
+        # Tags are computation-scoped: identifiers are instruction/value
+        # names, which are only unique within their computation — without
+        # the scope, same-named sync ops in different computations would
+        # alias one allocation.
+        scope = instr.computation
+        for tag in si.waits:
+            board.retire(si.kind, f"{scope}::{tag}", drain_to=si.counter)
+        res_ready, res_blocker = now, None
+        acquired = []
+        for tag in si.sets:
+            scoped = f"{scope}::{tag}"
+            acq = board.acquire(si.kind, scoped, consumer=q, now=now,
+                                weight=mult)
+            if acq is None:
+                continue
+            acquired.append((si.kind, scoped))
+            if acq.available_at > res_ready:
+                res_ready = acq.available_at
+                res_blocker = acq.evicted_holder
+        return res_ready, res_blocker, acquired
 
     def _ready_time(self, comp, instr: Instruction, env: Dict[str, float],
                     params: Dict[str, Instruction],
@@ -223,13 +281,13 @@ class VirtualSampler:
         return root
 
     def _issue_cycles(self, instr: Instruction, env, profile, issue_at, mult,
-                      depth) -> float:
+                      depth, board=None) -> float:
         if instr.opcode == "while":
             return self._simulate_while(instr, env, profile, issue_at, mult,
-                                        depth)
+                                        depth, board)
         if instr.opcode in ("call", "conditional"):
             return self._simulate_called(instr, env, profile, issue_at, mult,
-                                         depth)
+                                         depth, board)
         if instr.op_class is OpClass.COLLECTIVE and self.sync is not None \
                 and not getattr(self.sync, "async_collectives", True):
             return self.hw.latency_cycles(instr)
@@ -245,20 +303,20 @@ class VirtualSampler:
     _last_control_cost: float = 0.0
 
     def _simulate_called(self, instr: Instruction, env, profile, issue_at,
-                         mult, depth) -> float:
+                         mult, depth, board=None) -> float:
         end = issue_at
         for cname in instr.called_computations:
             callee = self.module.computations.get(cname)
             if callee is None or callee.kind in _SKIP_KINDS:
                 continue
             sub_end = self._simulate(callee, issue_at, env, mult, profile,
-                                     depth + 1)
+                                     depth + 1, board=board)
             end = max(end, sub_end)
         self._last_control_cost = end - issue_at
         return end - issue_at
 
     def _simulate_while(self, instr: Instruction, env, profile, issue_at,
-                        mult, depth) -> float:
+                        mult, depth, board=None) -> float:
         body = None
         for cname in instr.called_computations:
             c = self.module.computations.get(cname)
@@ -269,11 +327,15 @@ class VirtualSampler:
             return 0.0
         trips = max(1, instr.trip_count)
 
-        # Pass A (warm-up): no loop-carried availability info.
+        # Pass A (warm-up): no loop-carried availability info.  Runs on a
+        # forked scoreboard so warm-up allocations cannot pollute the
+        # steady-state pressure stats.
         warm = StallProfile(hw_name=self.hw.name, clock_hz=self.hw.clock_hz)
         env_a: Dict[str, float] = {}
         end_a = self._simulate(body, issue_at, env_a, 1.0, warm, depth + 1,
-                               loop_ctx={})
+                               loop_ctx={},
+                               board=board.fork() if board is not None
+                               else None)
         makespan_a = max(end_a - issue_at, 1.0)
 
         # Steady-state loop context: slot value available at
@@ -289,7 +351,7 @@ class VirtualSampler:
         # Pass B (steady state), recorded with weight mult * trips.
         env_b: Dict[str, float] = {}
         end_b = self._simulate(body, issue_at, env_b, mult * trips, profile,
-                               depth + 1, loop_ctx=loop_ctx)
+                               depth + 1, loop_ctx=loop_ctx, board=board)
         makespan_b = max(end_b - issue_at, 1.0)
         self._last_control_cost = trips * makespan_b
         return self._last_control_cost

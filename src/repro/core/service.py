@@ -46,7 +46,10 @@ from .session import LeoSession, ModuleLike, SessionStats
 #: diagnosis key, so old cache_dir artifacts read as misses, never as
 #: stale answers.  Backend constant changes are fingerprinted
 #: automatically (see `LeoService._diagnosis_key`).
-DIAGNOSIS_KEY_VERSION = 1
+#: v2: the sampler now drives a SyncModel scoreboard (finite §III-E sync
+#: resources serialize), changing stall profiles for oversubscribed
+#: programs.
+DIAGNOSIS_KEY_VERSION = 2
 
 
 @dataclass
@@ -133,8 +136,15 @@ class LeoService:
                  analysis_cache_size: Optional[int] = 512,
                  diagnosis_cache_size: Optional[int] = 512,
                  cache_dir: Optional[str] = None,
+                 disk_cache_max_bytes: Optional[int] = None,
+                 disk_cache_ttl_seconds: Optional[float] = None,
                  max_workers: int = 8):
-        self.disk_cache = DiskCache(cache_dir) if cache_dir else None
+        # disk_cache_max_bytes / _ttl_seconds bound the on-disk tier (size
+        # cap enforced oldest-accessed-first, idle TTL); None keeps the
+        # legacy unbounded behavior.
+        self.disk_cache = DiskCache(
+            cache_dir, max_bytes=disk_cache_max_bytes,
+            ttl_seconds=disk_cache_ttl_seconds) if cache_dir else None
         self.session = LeoSession(
             pipeline=pipeline, backends=backends, hints=hints,
             default_backend=default_backend,
@@ -247,7 +257,10 @@ class LeoService:
         silently serving stale estimates from a warm ``cache_dir``.
         ``DIAGNOSIS_KEY_VERSION`` covers analysis-code changes that keys
         cannot see (pass internals, recommendation rules): bump it when
-        their semantics change."""
+        their semantics change.  The Diagnosis SCHEMA_VERSION is
+        deliberately NOT part of the key: schema-only bumps keep hitting
+        the old artifacts, which ``Diagnosis.from_dict`` migrates forward
+        (a warm cache survives a schema bump)."""
         if isinstance(program, Module):
             return None
         mkey = self.session.module_key(program, hints)
@@ -258,7 +271,7 @@ class LeoService:
         h = hashlib.sha256()
         h.update(json.dumps([
             mkey, backend_fp, n_chains, prune_unexecuted,
-            SCHEMA_VERSION, DIAGNOSIS_KEY_VERSION,
+            DIAGNOSIS_KEY_VERSION,
             self.session.pipeline.names,
         ]).encode())
         return h.hexdigest()

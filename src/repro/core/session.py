@@ -80,7 +80,8 @@ def _clone_graph(graph: DependencyGraph) -> DependencyGraph:
     clone = DependencyGraph(module=graph.module)
     for e in graph.edges:
         clone.add(Edge(producer=e.producer, consumer=e.consumer, kind=e.kind,
-                       paths=list(e.paths), pruned_by=e.pruned_by))
+                       paths=list(e.paths), pruned_by=e.pruned_by,
+                       resource=e.resource))
     return clone
 
 

@@ -21,6 +21,13 @@ their exact XLA/Pallas counterparts:
 
 All three produce typed edges that are exempt from opcode and latency
 pruning (they are compiler-verified dependencies).
+
+When the backend carries a :class:`~repro.core.backends.SyncModel`, each
+sync edge is additionally annotated with the *concrete resource instance*
+it consumed ("B3", "vmcnt", "$5"): a logical scoreboard replay assigns
+every set identifier to a physical instance the same way the sampler's
+stateful scoreboard does, so edge annotations, SYNC_RESOURCE stall events
+and the Diagnosis ``sync_resources`` section all name the same hardware.
 """
 from __future__ import annotations
 
@@ -30,13 +37,72 @@ from .cfg import PathInfo
 from .depgraph import DependencyGraph, Edge
 from .isa import EdgeKind, Instruction, Module, OpClass, SyncKind
 
+#: (kind, computation, tag) -> physical instance name, from the replay.
+#: Tags are computation-scoped, mirroring the sampler's scoreboard keys.
+ResourceAssignment = Dict[Tuple[SyncKind, str, str], str]
 
-def add_sync_edges(graph: DependencyGraph) -> int:
-    """Extend `graph` with §III-E synchronization edges.  Returns # added."""
+# Computation kinds the sampler never schedules as independent streams
+# (mirrors sampler._SKIP_KINDS); the replay still visits them afterwards
+# so their edges (e.g. Pallas DMA streams inside fusions) get annotated.
+_SKIP_KINDS = ("fusion", "reduce", "loop_cond")
+
+
+def assign_sync_resources(module: Module, sync) -> ResourceAssignment:
+    """Replay the module's sync ops against a logical scoreboard, mapping
+    every set identifier to the physical resource instance it lands on.
+
+    The replay follows the sampler's execution order — entry computation,
+    recursing into called computations at their call sites — so instance
+    assignments match the dynamic scoreboard's and the edge annotations
+    name the same hardware as the SYNC_RESOURCE stall events.
+    """
+    if sync is None or not getattr(sync, "pools", ()):
+        return {}
+    board = sync.scoreboard()
+    assign: ResourceAssignment = {}
+    visited: Set[str] = set()
+
+    def walk(comp_name: str, depth: int) -> None:
+        if depth > 32 or comp_name in visited:
+            return
+        visited.add(comp_name)
+        comp = module.computations.get(comp_name)
+        if comp is None:
+            return
+        for instr in comp.instructions:
+            si = instr.sync
+            if si.kind is not None:
+                for tag in si.waits:
+                    board.retire(si.kind, f"{comp.name}::{tag}",
+                                 drain_to=si.counter)
+                for tag in si.sets:
+                    acq = board.acquire(si.kind, f"{comp.name}::{tag}",
+                                        consumer=instr.qualified_name)
+                    if acq is not None:
+                        assign[(si.kind, comp.name, tag)] = acq.instance
+            for callee in instr.called_computations:
+                c = module.computations.get(callee)
+                if c is not None and c.kind not in _SKIP_KINDS:
+                    walk(callee, depth + 1)
+
+    if module.entry:
+        walk(module.entry, 0)
+    for comp in module.computations.values():   # unreached (fusion bodies…)
+        walk(comp.name, 0)
+    return assign
+
+
+def add_sync_edges(graph: DependencyGraph, sync=None) -> int:
+    """Extend `graph` with §III-E synchronization edges.  Returns # added.
+
+    ``sync`` (a backend ``SyncModel``) enables per-edge resource-instance
+    annotation via :func:`assign_sync_resources`.
+    """
+    assign = assign_sync_resources(graph.module, sync)
     n = 0
-    n += _trace_barriers(graph)
-    n += _trace_waitcnt(graph)
-    n += _trace_tokens(graph)
+    n += _trace_barriers(graph, assign)
+    n += _trace_waitcnt(graph, assign)
+    n += _trace_tokens(graph, assign)
     return n
 
 
@@ -46,7 +112,8 @@ def _existing(graph: DependencyGraph) -> Set[Tuple[str, str, EdgeKind]]:
 
 def _add(graph: DependencyGraph, seen: Set[Tuple[str, str, EdgeKind]],
          producer: Instruction, consumer: Instruction, kind: EdgeKind,
-         path: Optional[PathInfo] = None) -> int:
+         path: Optional[PathInfo] = None,
+         resource: Optional[str] = None) -> int:
     key = (producer.qualified_name, consumer.qualified_name, kind)
     if key in seen or producer is consumer:
         return 0
@@ -57,13 +124,15 @@ def _add(graph: DependencyGraph, seen: Set[Tuple[str, str, EdgeKind]],
         path = PathInfo(instr_count=max(dist - 1, 0.0), issue_cycles=0.0,
                         kind="sync")
     graph.add(Edge(producer=producer.qualified_name,
-                   consumer=consumer.qualified_name, kind=kind, paths=[path]))
+                   consumer=consumer.qualified_name, kind=kind, paths=[path],
+                   resource=resource))
     return 1
 
 
 # -- NVIDIA-barrier analogue: HLO async pairs -------------------------------
 
-def _trace_barriers(graph: DependencyGraph) -> int:
+def _trace_barriers(graph: DependencyGraph,
+                    assign: ResourceAssignment) -> int:
     module = graph.module
     seen = _existing(graph)
     n = 0
@@ -78,7 +147,9 @@ def _trace_barriers(graph: DependencyGraph) -> int:
                 start = starts.get(waited) or comp.get(waited)
                 if start is None:
                     continue
-                n += _add(graph, seen, start, instr, EdgeKind.MEM_BARRIER)
+                res = assign.get((SyncKind.BARRIER, comp.name, waited))
+                n += _add(graph, seen, start, instr, EdgeKind.MEM_BARRIER,
+                          resource=res)
                 # Reach *through* the start to the memory/data producers the
                 # transfer actually depends on (the paper's goal: identify
                 # the memory accesses causing synchronization stalls).
@@ -87,13 +158,14 @@ def _trace_barriers(graph: DependencyGraph) -> int:
                     if producer is not None and producer.op_class not in (
                             OpClass.TUPLE, OpClass.CONSTANT):
                         n += _add(graph, seen, producer, instr,
-                                  EdgeKind.MEM_BARRIER)
+                                  EdgeKind.MEM_BARRIER, resource=res)
     return n
 
 
 # -- AMD s_waitcnt analogue: DMA semaphore counters --------------------------
 
-def _trace_waitcnt(graph: DependencyGraph) -> int:
+def _trace_waitcnt(graph: DependencyGraph,
+                   assign: ResourceAssignment) -> int:
     """Counted-semaphore tracing for Pallas-style DMA streams.
 
     Instructions carry SyncInfo(kind=WAITCNT): DMA starts *set* a counter id
@@ -127,21 +199,24 @@ def _trace_waitcnt(graph: DependencyGraph) -> int:
                         if drained_to == 0:
                             pending = []
                 m = len(pending)
+                res = assign.get((SyncKind.WAITCNT, comp.name, sem))
                 blamed = pending[: max(0, m - allow)]  # the oldest (M-N)
                 for start in blamed:
-                    n += _add(graph, seen, start, instr, EdgeKind.MEM_WAITCNT)
+                    n += _add(graph, seen, start, instr, EdgeKind.MEM_WAITCNT,
+                              resource=res)
                     for op in start.operands:
                         producer = comp.get(op)
                         if producer is not None and producer.op_class not in (
                                 OpClass.TUPLE, OpClass.CONSTANT):
                             n += _add(graph, seen, producer, instr,
-                                      EdgeKind.MEM_WAITCNT)
+                                      EdgeKind.MEM_WAITCNT, resource=res)
     return n
 
 
 # -- Intel SWSB analogue: token threading ------------------------------------
 
-def _trace_tokens(graph: DependencyGraph) -> int:
+def _trace_tokens(graph: DependencyGraph,
+                  assign: ResourceAssignment) -> int:
     module = graph.module
     seen = _existing(graph)
     n = 0
@@ -179,5 +254,7 @@ def _trace_tokens(graph: DependencyGraph) -> int:
                     # merge node: traverse to all joined sources
                     frontier.extend(producer.operands)
                     continue
-                n += _add(graph, seen, producer, instr, EdgeKind.MEM_SWSB)
+                n += _add(graph, seen, producer, instr, EdgeKind.MEM_SWSB,
+                          resource=assign.get((SyncKind.TOKEN, comp.name,
+                                               t)))
     return n

@@ -167,6 +167,37 @@ def demo_hlo(seed: int = 0, n: int = 128, trips: int = 5) -> str:
     return _DEMO_HLO.format(seed=seed, n=n, trips=trips)
 
 
+def copy_storm_hlo(n_copies: int = 8, dim: int = 512) -> str:
+    """Oversubscription demo trace (§III-E): `n_copies` async copies all
+    in flight before any done — a double-buffered pipeline prologue
+    cranked past some vendors' finite sync resources.  8 copies exceed
+    NVIDIA-class named barriers (6) and AMD-class waitcnt counters (2)
+    but fit Intel-class SWSB tokens (16) and TPU async contexts (32), so
+    the same program serializes on some backends and not others.  Shared
+    by `examples/crossvendor_divergence.py` and the divergence goldens
+    (`tests/test_backend_divergence.py` pins snapshots of this exact
+    trace — keep them in sync when changing it)."""
+    lines = [f"  %arg{i} = f32[{dim},{dim}] parameter({i})"
+             for i in range(n_copies)]
+    for i in range(n_copies):
+        lines.append(
+            f"  %cp{i}-start = (f32[{dim},{dim}], f32[{dim},{dim}], u32[]) "
+            f"copy-start(%arg{i}), "
+            f'metadata={{op_name="jit(step)/model/io/copy{i}"}}')
+    for i in range(n_copies):
+        lines.append(
+            f"  %cp{i}-done = f32[{dim},{dim}] copy-done(%cp{i}-start), "
+            f'metadata={{op_name="jit(step)/model/io/copy{i}"}}')
+    acc = "cp0-done"
+    for i in range(1, n_copies):
+        lines.append(f"  %s{i} = f32[{dim},{dim}] add(%{acc}, %cp{i}-done)")
+        acc = f"s{i}"
+    lines.append(f"  ROOT %out = f32[{dim},{dim}] negate(%{acc})")
+    params = ", ".join(f"arg{i}: f32[{dim},{dim}]" for i in range(n_copies))
+    return (f"HloModule fixture_copystorm\n\nENTRY %main.1 ({params}) -> "
+            f"f32[{dim},{dim}] {{\n" + "\n".join(lines) + "\n}\n")
+
+
 def _load_hlo(path: str) -> str:
     if path.endswith(".gz"):
         with gzip.open(path, "rt") as f:

@@ -136,11 +136,14 @@ def get_service(outdir: str):
     process shares the parse/graph/analysis caches, and a *second process*
     re-running a cell against the warm `<outdir>/.leo_cache` performs zero
     HLO parses (modules and diagnoses reload from the content-addressed
-    disk tier)."""
+    disk tier).  The tier is bounded — 512 MiB cap, 14-day idle TTL — so a
+    long-lived sweep directory cannot grow without bound."""
     from ..core import LeoService
     svc = _SERVICES.get(outdir)
     if svc is None:
-        svc = LeoService(cache_dir=os.path.join(outdir, ".leo_cache"))
+        svc = LeoService(cache_dir=os.path.join(outdir, ".leo_cache"),
+                         disk_cache_max_bytes=512 * 2**20,
+                         disk_cache_ttl_seconds=14 * 24 * 3600.0)
         _SERVICES[outdir] = svc
     return svc
 

@@ -82,3 +82,25 @@ ENTRY %main.1 (arg0: f32[128,128], arg1: f32[128,128]) -> f32[128,128] {
 @pytest.fixture()
 def async_hlo_text():
     return ASYNC_HLO
+
+
+def _copystorm_hlo(n_copies: int = 8, dim: int = 512) -> str:
+    """Oversubscription fixture (§III-E): `n_copies` async copies all in
+    flight before any done — more than NVIDIA-class parts have barrier
+    slots (6) and AMD-class parts have waitcnt counters (2), but fewer
+    than Intel-class SWSB tokens (16) or TPU async contexts (32), so the
+    same program serializes on some vendors and sails through on others.
+    One shared builder (also the crossvendor example's demo trace) so the
+    goldens and the demo can never drift apart."""
+    from repro.launch.analysis_server import copy_storm_hlo
+    return copy_storm_hlo(n_copies, dim)
+
+
+#: 8 concurrent async copies: oversubscribes NVIDIA barriers and AMD
+#: waitcnt counters, fits Intel SWSB tokens and TPU async contexts.
+COPYSTORM_HLO = _copystorm_hlo()
+
+
+@pytest.fixture()
+def copystorm_hlo_text():
+    return COPYSTORM_HLO

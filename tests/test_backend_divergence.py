@@ -1,15 +1,26 @@
 """Per-backend divergence regression (ROADMAP open item).
 
-Golden snapshot of what each registered vendor descriptor says about the
-fixed async-collective HLO fixture: top root causes, recommended action,
-dominant stall in the unified §II-D taxonomy AND the vendor-native
-vocabulary, plus the modeled step time.  Any drift in a backend's
-class-estimate constants, taxonomy table, or the blame/pruning pipeline
-shows up here as a precise per-backend diff instead of a silent
-cross-vendor collapse.
+Golden snapshots of what each registered vendor descriptor says about two
+fixed fixtures:
+
+* ``ASYNC_HLO`` (async collective + gather + while loop): top root causes,
+  recommended action, dominant stall in the unified §II-D taxonomy AND the
+  vendor-native vocabulary, plus the modeled step time;
+* ``COPYSTORM_HLO`` (8 concurrent async copies): the §III-E *resource
+  pressure* snapshot — whether the storm oversubscribes the backend's
+  finite sync resources, which pool contends, and the dominant stall
+  class.  This is the paper's headline case-study shape: the SAME program
+  serializes on waitcnt counters on the AMD-class part (sync_resource /
+  s_waitcnt_alias), fits Intel's 16 SWSB tokens (sync_wait), and lands in
+  between on NVIDIA's 6 named barriers — three vendors, three different
+  top blame classes.
+
+Any drift in a backend's class-estimate constants, taxonomy table, sync
+model, or the blame/pruning pipeline shows up here as a precise
+per-backend diff instead of a silent cross-vendor collapse.
 
 When a constant is *intentionally* recalibrated (e.g. against
-vendor-published microbenchmarks), regenerate the golden block:
+vendor-published microbenchmarks), regenerate the golden blocks:
 
   PYTHONPATH=src python tests/test_backend_divergence.py
 """
@@ -76,9 +87,73 @@ GOLDEN = {
 }
 
 
+#: backend -> §III-E resource-pressure snapshot on the COPYSTORM fixture
+#: (8 concurrent async copies, no sharding).
+COPYSTORM_GOLDEN = {
+    "amd_mi300a": {
+        "vendor": "amd",
+        "dominant_stall": "sync_resource",
+        "dominant_native": "s_waitcnt_alias",
+        "contended": True,
+        "contended_pool": "waitcnt_counter",
+        "sync_blames": 6,
+        "est_step_seconds": 4.238071446540881e-06,
+    },
+    "intel_pvc": {
+        "vendor": "intel",
+        "dominant_stall": "sync_wait",
+        "dominant_native": "sync_func_wait",
+        "contended": False,
+        "contended_pool": None,
+        "sync_blames": 0,
+        "est_step_seconds": 4.875944512195124e-06,
+    },
+    "nvidia_gh200": {
+        "vendor": "nvidia",
+        "dominant_stall": "mem_dep",
+        "dominant_native": "long_scoreboard",
+        "contended": True,
+        "contended_pool": "named_barrier",
+        "sync_blames": 2,
+        "est_step_seconds": 4.0725991584699435e-06,
+    },
+    "tpu_v4": {
+        "vendor": "google",
+        "dominant_stall": "sync_wait",
+        "dominant_native": "dma_semaphore_wait",
+        "contended": False,
+        "contended_pool": None,
+        "sync_blames": 0,
+        "est_step_seconds": 1.2940726229253915e-05,
+    },
+    "tpu_v5e": {
+        "vendor": "google",
+        "dominant_stall": "sync_wait",
+        "dominant_native": "dma_semaphore_wait",
+        "contended": False,
+        "contended_pool": None,
+        "sync_blames": 0,
+        "est_step_seconds": 1.9352570753123946e-05,
+    },
+    "tpu_v5p": {
+        "vendor": "google",
+        "dominant_stall": "sync_wait",
+        "dominant_native": "dma_semaphore_wait",
+        "contended": False,
+        "contended_pool": None,
+        "sync_blames": 0,
+        "est_step_seconds": 5.767908860759494e-06,
+    },
+}
+
+
+def _dominant(diag) -> str:
+    return max(diag.top_stalls[0]["breakdown"],
+               key=diag.top_stalls[0]["breakdown"].get)
+
+
 def _snapshot(diag) -> dict:
-    dominant = max(diag.top_stalls[0]["breakdown"],
-                   key=diag.top_stalls[0]["breakdown"].get)
+    dominant = _dominant(diag)
     return {
         "vendor": diag.vendor,
         "top_root_causes": [rc["instruction"]
@@ -91,11 +166,33 @@ def _snapshot(diag) -> dict:
     }
 
 
+def _copystorm_snapshot(diag) -> dict:
+    dominant = _dominant(diag)
+    sr = diag.sync_resources
+    contended_pools = [p["pool"] for p in sr["pools"] if p.get("evictions")]
+    return {
+        "vendor": diag.vendor,
+        "dominant_stall": dominant,
+        "dominant_native": diag.stall_taxonomy[dominant],
+        "contended": sr["contended"],
+        "contended_pool": contended_pools[0] if contended_pools else None,
+        "sync_blames": len(sr.get("blame", [])),
+        "est_step_seconds": diag.estimated_step_seconds,
+    }
+
+
 @pytest.fixture(scope="module")
 def diagnoses():
     from conftest import ASYNC_HLO
     service = LeoService()
     return service.diagnose_fanout(ASYNC_HLO, hints={"total_devices": 8})
+
+
+@pytest.fixture(scope="module")
+def copystorm_diagnoses():
+    from conftest import COPYSTORM_HLO
+    service = LeoService()
+    return service.diagnose_fanout(COPYSTORM_HLO)
 
 
 class TestBackendDivergenceRegression:
@@ -124,16 +221,74 @@ class TestBackendDivergenceRegression:
         assert len({round(t, 12) for t in times.values()}) == len(times)
 
 
+class TestSyncResourceDivergence:
+    """COPYSTORM regression: the same 8-copy storm must blame differently
+    per vendor *because of finite sync resources* (ISSUE acceptance)."""
+
+    @pytest.mark.parametrize("backend", sorted(COPYSTORM_GOLDEN))
+    def test_copystorm_snapshot(self, copystorm_diagnoses, backend):
+        got = _copystorm_snapshot(copystorm_diagnoses[backend])
+        want = dict(COPYSTORM_GOLDEN[backend])
+        est_want = want.pop("est_step_seconds")
+        est_got = got.pop("est_step_seconds")
+        assert got == want
+        assert est_got == pytest.approx(est_want, rel=1e-9)
+
+    def test_top_blame_class_differs_across_gpu_vendors(
+            self, copystorm_diagnoses):
+        """The headline §VI result: NVIDIA-, AMD- and Intel-class parts
+        each report a DIFFERENT top blame class on the same program, and
+        the difference is driven by resource pressure (the contended
+        backends are exactly the ones whose pools are smaller than the
+        storm)."""
+        classes = {b: _dominant(copystorm_diagnoses[b])
+                   for b in ("nvidia_gh200", "amd_mi300a", "intel_pvc")}
+        assert len(set(classes.values())) == 3, classes
+        # AMD's two waitcnt counters are the scarcest resource: its top
+        # blame class IS the resource exhaustion itself
+        assert classes["amd_mi300a"] == "sync_resource"
+        # Intel's 16 SWSB tokens absorb the storm: no resource pressure
+        assert not copystorm_diagnoses["intel_pvc"].sync_resources[
+            "contended"]
+        assert copystorm_diagnoses["nvidia_gh200"].sync_resources[
+            "contended"]
+        assert copystorm_diagnoses["amd_mi300a"].sync_resources["contended"]
+
+    def test_contended_backends_name_concrete_instances(
+            self, copystorm_diagnoses):
+        for backend, want in COPYSTORM_GOLDEN.items():
+            sr = copystorm_diagnoses[backend].sync_resources
+            if not want["contended"]:
+                assert not sr.get("blame")
+                continue
+            pool = next(p for p in sr["pools"]
+                        if p["pool"] == want["contended_pool"])
+            assert pool["peak_in_flight"] == pool["capacity"]
+            for b in sr["blame"]:
+                assert b["resource"] in pool["instances"]
+
+
 if __name__ == "__main__":
-    # regenerate the GOLDEN block after an intentional recalibration
+    # regenerate the GOLDEN blocks after an intentional recalibration
     import sys
     sys.path.insert(0, "tests")
-    from conftest import ASYNC_HLO
+    from conftest import ASYNC_HLO, COPYSTORM_HLO
     diags = LeoService().diagnose_fanout(ASYNC_HLO,
                                          hints={"total_devices": 8})
+    print("GOLDEN = {")
     for name in sorted(diags):
         snap = _snapshot(diags[name])
         print(f'    "{name}": {{')
         for k, v in snap.items():
             print(f'        "{k}": {v!r},')
         print("    },")
+    print("}")
+    storm = LeoService().diagnose_fanout(COPYSTORM_HLO)
+    print("COPYSTORM_GOLDEN = {")
+    for name in sorted(storm):
+        snap = _copystorm_snapshot(storm[name])
+        print(f'    "{name}": {{')
+        for k, v in snap.items():
+            print(f'        "{k}": {v!r},')
+        print("    },")
+    print("}")

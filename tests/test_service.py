@@ -272,6 +272,98 @@ class TestDiskCache:
 
 
 # --------------------------------------------------------------------------
+# On-disk tier eviction: size cap + TTL sweep (the .leo_cache dir must not
+# grow without bound).
+# --------------------------------------------------------------------------
+
+class TestDiskEviction:
+    def _fill(self, cache, n=6):
+        from repro.core import DiskCache  # noqa: F401 (import for clarity)
+        import hashlib
+        keys = []
+        for i in range(n):
+            key = hashlib.sha256(f"artifact-{i}".encode()).hexdigest()
+            cache.store_module(key, {"format": "test", "payload": "x" * 4096,
+                                     "i": i})
+            keys.append(key)
+        return keys
+
+    def test_size_cap_evicts_oldest_first(self, tmp_path):
+        import os
+        from repro.core import DiskCache
+        cache = DiskCache(str(tmp_path), max_bytes=1)   # everything over cap
+        keys = self._fill(cache, n=4)
+        # stagger mtimes so eviction order is deterministic
+        for i, key in enumerate(keys):
+            os.utime(cache._path("modules", key, ".pkl.gz"),
+                     (1_000_000 + i, 1_000_000 + i))
+        stats = cache.sweep()
+        assert stats["evicted"] == 4
+        assert cache.total_bytes() == 0
+        assert cache.stats.evictions == 4
+        assert cache.stats.bytes_evicted == stats["bytes_freed"] > 0
+
+    def test_size_cap_keeps_newest_within_budget(self, tmp_path):
+        import os
+        from repro.core import DiskCache
+        cache = DiskCache(str(tmp_path))
+        keys = self._fill(cache, n=5)
+        for i, key in enumerate(keys):
+            os.utime(cache._path("modules", key, ".pkl.gz"),
+                     (1_000_000 + i, 1_000_000 + i))
+        sizes = [os.path.getsize(cache._path("modules", k, ".pkl.gz"))
+                 for k in keys]
+        cache.max_bytes = sizes[-1] + sizes[-2]   # room for exactly two
+        cache.sweep()
+        survivors = [k for k in keys
+                     if os.path.exists(cache._path("modules", k, ".pkl.gz"))]
+        assert survivors == keys[-2:]             # oldest-accessed went first
+
+    def test_ttl_expires_idle_artifacts(self, tmp_path):
+        import time
+        from repro.core import DiskCache
+        cache = DiskCache(str(tmp_path), ttl_seconds=3600.0)
+        keys = self._fill(cache, n=3)
+        # nothing is idle yet
+        assert cache.sweep()["evicted"] == 0
+        # pretend an hour+ passed
+        stats = cache.sweep(now=time.time() + 7200.0)
+        assert stats["evicted"] == 3
+        assert all(cache.load_module(k) is None for k in keys)
+
+    def test_hits_refresh_mtime_so_hot_artifacts_survive(self, tmp_path):
+        import os
+        import time
+        from repro.core import DiskCache
+        cache = DiskCache(str(tmp_path), ttl_seconds=3600.0)
+        keys = self._fill(cache, n=2)
+        old = time.time() - 7200.0
+        for key in keys:
+            os.utime(cache._path("modules", key, ".pkl.gz"), (old, old))
+        assert cache.load_module(keys[0]) is not None   # hit refreshes mtime
+        stats = cache.sweep()
+        assert stats["evicted"] == 1                    # only the cold one
+        assert cache.load_module(keys[0]) is not None
+
+    def test_sweep_triggers_opportunistically_on_writes(self, tmp_path):
+        from repro.core import DiskCache
+        cache = DiskCache(str(tmp_path), max_bytes=1, sweep_interval=4)
+        self._fill(cache, n=4)                          # 4th write sweeps
+        assert cache.stats.sweeps >= 1
+        assert cache.stats.evictions >= 1
+
+    def test_service_passes_disk_bounds_through(self, async_hlo_text,
+                                                tmp_path):
+        svc = LeoService(cache_dir=str(tmp_path),
+                         disk_cache_max_bytes=123456,
+                         disk_cache_ttl_seconds=60.0)
+        assert svc.disk_cache.max_bytes == 123456
+        assert svc.disk_cache.ttl_seconds == 60.0
+        svc.diagnose(async_hlo_text, hints={"total_devices": 8})
+        assert "evictions" in svc.stats_dict()["disk"]
+
+
+# --------------------------------------------------------------------------
 # Concurrency: fan-out with single-flight dedup.
 # --------------------------------------------------------------------------
 

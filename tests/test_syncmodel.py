@@ -1,0 +1,406 @@
+"""Tests for the first-class SyncModel API (§III-E finite sync resources).
+
+Covers the scoreboard's allocation semantics (capacity, oldest-eviction
+serialization, counter-style re-arm), the SyncSemantics deprecation shim's
+parity, behavioral resource exhaustion end-to-end (the acceptance
+criterion: the same copy storm stalls NVIDIA-class parts and sails through
+Intel-class parts, with the consumed instance named in the Diagnosis), the
+sync-edge resource annotation, and the schema-v2 migration path.
+"""
+import json
+
+import pytest
+
+from repro.core import (
+    Diagnosis,
+    DiskCache,
+    LeoService,
+    MIN_SCHEMA_VERSION,
+    SCHEMA_VERSION,
+    StallClass,
+    SyncKind,
+    SyncModel,
+    SyncResourcePool,
+    SyncSemantics,
+    TPU_V5E,
+    analyze_hlo,
+    get_backend,
+    list_backends,
+)
+from repro.core.backends import Backend, GENERIC_TAXONOMY
+
+
+def _two_slot_model() -> SyncModel:
+    return SyncModel(
+        pools=(SyncResourcePool(name="bar", kind=SyncKind.BARRIER,
+                                label="two barriers", instances=("b0", "b1")),),
+        routing={SyncKind.BARRIER: "bar", SyncKind.WAITCNT: "bar",
+                 SyncKind.TOKEN: "bar"})
+
+
+def _sync_resource_cycles(analysis) -> float:
+    return sum(rec.stall_breakdown.get(StallClass.SYNC_RESOURCE, 0.0)
+               for rec in analysis.profile.records.values())
+
+
+# --------------------------------------------------------------------------
+# Scoreboard unit semantics.
+# --------------------------------------------------------------------------
+
+class TestScoreboard:
+    def test_acquire_assigns_distinct_instances(self):
+        sb = _two_slot_model().scoreboard()
+        a = sb.acquire(SyncKind.BARRIER, "t0", consumer="i0", now=0.0)
+        b = sb.acquire(SyncKind.BARRIER, "t1", consumer="i1", now=0.0)
+        assert {a.instance, b.instance} == {"b0", "b1"}
+        assert a.stall_cycles == b.stall_cycles == 0.0
+        assert sb.in_flight(SyncKind.BARRIER) == 2
+
+    def test_exhaustion_serializes_against_oldest(self):
+        sb = _two_slot_model().scoreboard()
+        sb.acquire(SyncKind.BARRIER, "t0", consumer="i0", now=0.0)
+        sb.complete(SyncKind.BARRIER, "t0", 100.0)
+        sb.acquire(SyncKind.BARRIER, "t1", consumer="i1", now=1.0)
+        sb.complete(SyncKind.BARRIER, "t1", 50.0)
+        # pool full: the third acquire evicts t0 (the OLDEST, not the
+        # earliest-completing) and inherits its remaining latency
+        c = sb.acquire(SyncKind.BARRIER, "t2", consumer="i2", now=10.0)
+        assert c.evicted_tag.endswith("t0")
+        assert c.evicted_holder == "i0"
+        assert c.stall_cycles == pytest.approx(90.0)
+        assert c.available_at == pytest.approx(100.0)
+        assert sb.in_flight(SyncKind.BARRIER) == 2   # never exceeds capacity
+
+    def test_every_eviction_pays_realloc_overhead(self):
+        """Slot reuse always pays the drain/re-arm cost (hwmodel's
+        sync_realloc_cycles), even when the evicted holder's transfer
+        already landed — only a FREE instance is free."""
+        sb = _two_slot_model().scoreboard(realloc_cycles=8.0)
+        sb.acquire(SyncKind.BARRIER, "t0", consumer="i0", now=0.0)
+        sb.complete(SyncKind.BARRIER, "t0", 100.0)
+        sb.acquire(SyncKind.BARRIER, "t1", consumer="i1", now=0.0)
+        stalled = sb.acquire(SyncKind.BARRIER, "t2", consumer="i2", now=10.0)
+        assert stalled.stall_cycles == pytest.approx(98.0)   # 90 + realloc
+        done = sb.acquire(SyncKind.BARRIER, "t3", consumer="i3", now=500.0)
+        assert done.stall_cycles == pytest.approx(8.0)       # re-arm only
+        sb.retire(SyncKind.BARRIER, "t2")
+        freed = sb.acquire(SyncKind.BARRIER, "t4", consumer="i4", now=501.0)
+        assert freed.stall_cycles == 0.0                     # truly free
+
+    def test_same_tag_rearm_is_counter_increment(self):
+        """Pallas streams re-arm the SAME semaphore repeatedly: that's one
+        physical counter tracking N outstanding ops, not N instances."""
+        sb = _two_slot_model().scoreboard()
+        for _ in range(5):
+            acq = sb.acquire(SyncKind.WAITCNT, "sem", consumer="dma", now=0.0)
+            assert acq.stall_cycles == 0.0
+        assert sb.in_flight(SyncKind.WAITCNT) == 1
+        # one retire per outstanding op; the 5th drains it
+        for _ in range(5):
+            assert sb.retire(SyncKind.WAITCNT, "sem")
+        assert sb.in_flight(SyncKind.WAITCNT) == 0
+        assert not sb.retire(SyncKind.WAITCNT, "sem")
+
+    def test_retire_drain_to_counter_semantics(self):
+        sb = _two_slot_model().scoreboard()
+        for _ in range(4):
+            sb.acquire(SyncKind.WAITCNT, "sem", consumer="dma", now=0.0)
+        sb.retire(SyncKind.WAITCNT, "sem", drain_to=1)   # s_waitcnt vmcnt(1)
+        assert sb.in_flight(SyncKind.WAITCNT) == 1
+        sb.retire(SyncKind.WAITCNT, "sem", drain_to=0)
+        assert sb.in_flight(SyncKind.WAITCNT) == 0
+
+    def test_fork_isolates_state(self):
+        sb = _two_slot_model().scoreboard()
+        sb.acquire(SyncKind.BARRIER, "t0", consumer="i0", now=0.0)
+        fork = sb.fork()
+        fork.acquire(SyncKind.BARRIER, "t1", consumer="i1", now=0.0)
+        assert fork.in_flight(SyncKind.BARRIER) == 2
+        assert sb.in_flight(SyncKind.BARRIER) == 1
+
+    def test_report_shape_is_json_pure(self):
+        sb = _two_slot_model().scoreboard()
+        sb.acquire(SyncKind.BARRIER, "t0", consumer="i0", now=0.0)
+        report = sb.report()
+        json.dumps(report.to_dict())   # must not raise
+        (pool,) = report.pools
+        assert pool["capacity"] == 2 and pool["peak_in_flight"] == 1
+        assert set(pool["serves"]) == {"barrier", "waitcnt", "token"}
+
+
+class TestScoreboardProperty:
+    def test_capacity_invariant_and_roundtrip_all_backends(self):
+        """ISSUE satellite: for every registered backend, any acquire
+        sequence keeps every pool within capacity, and retiring everything
+        acquired drains the scoreboard to empty."""
+        hypothesis = pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (requirements-dev.txt)")
+        from hypothesis import given, settings, strategies as st
+
+        backends = [b for b in list_backends() if b.sync.pools]
+        assert len(backends) >= 6
+
+        ops = st.lists(
+            st.tuples(st.sampled_from(list(SyncKind)),
+                      st.integers(0, 40)),       # tag ids
+            min_size=1, max_size=80)
+
+        @settings(max_examples=60, deadline=None)
+        @given(st.integers(0, len(backends) - 1), ops)
+        def check(bidx, sequence):
+            backend = backends[bidx]
+            sb = backend.sync.scoreboard()
+            capacities = {p.name: p.capacity for p in backend.sync.pools}
+            acquired = set()
+            for t, (kind, tag) in enumerate(sequence):
+                sb.acquire(kind, f"t{tag}", consumer=f"i{t}", now=float(t))
+                acquired.add((kind, f"t{tag}"))
+                for pool_name, cap in capacities.items():
+                    board = sb._boards[pool_name]
+                    assert board.in_flight <= cap
+            for kind, tag in acquired:
+                while sb.retire(kind, tag):
+                    pass
+            assert sb.total_in_flight == 0
+
+        check()
+
+
+# --------------------------------------------------------------------------
+# SyncSemantics deprecation shim.
+# --------------------------------------------------------------------------
+
+class TestSyncSemanticsShim:
+    def test_construction_warns(self):
+        with pytest.warns(DeprecationWarning, match="SyncSemantics"):
+            SyncSemantics()
+
+    def test_backend_converts_shim_to_model(self):
+        with pytest.warns(DeprecationWarning):
+            sem = SyncSemantics(barrier_slots=4, waitcnt_counters=0,
+                                swsb_tokens=0,
+                                mechanisms=(SyncKind.BARRIER,))
+        b = Backend(name="shim_test", vendor="test", hw=TPU_V5E,
+                    stall_taxonomy=GENERIC_TAXONOMY, sync=sem)
+        assert isinstance(b.sync, SyncModel)
+        assert b.sync.barrier_slots == 4
+        assert b.sync.pool_for(SyncKind.BARRIER).name == "named_barrier"
+        # unexposed mechanisms are emulated on the primary pool
+        assert b.sync.pool_for(SyncKind.TOKEN).name == "named_barrier"
+
+    def test_legacy_knob_views_round_trip(self):
+        with pytest.warns(DeprecationWarning):
+            sem = SyncSemantics(barrier_slots=6, waitcnt_counters=2,
+                                swsb_tokens=16, async_collectives=False)
+        model = sem.to_model()
+        assert model.barrier_slots == sem.barrier_slots
+        assert model.waitcnt_counters == sem.waitcnt_counters
+        assert model.swsb_tokens == sem.swsb_tokens
+        assert model.async_collectives == sem.async_collectives
+        assert set(model.mechanisms) == set(sem.mechanisms)
+
+    def test_shim_backend_analysis_parity(self, copystorm_hlo_text):
+        """A backend defined through the shim must analyze byte-identically
+        to one defined through the equivalent hand-built SyncModel."""
+        with pytest.warns(DeprecationWarning):
+            sem = SyncSemantics(mechanisms=(SyncKind.BARRIER,),
+                                barrier_slots=3, waitcnt_counters=0,
+                                swsb_tokens=0)
+        via_shim = Backend(name="parity_shim", vendor="test", hw=TPU_V5E,
+                           stall_taxonomy=GENERIC_TAXONOMY, sync=sem)
+        via_model = Backend(name="parity_model", vendor="test", hw=TPU_V5E,
+                            stall_taxonomy=GENERIC_TAXONOMY,
+                            sync=SyncModel.from_semantics(sem))
+        a = analyze_hlo(copystorm_hlo_text, hw=via_shim)
+        b = analyze_hlo(copystorm_hlo_text, hw=via_model)
+        da, db = Diagnosis.from_analysis(a), Diagnosis.from_analysis(b)
+        da.backend = db.backend = "x"   # only the names differ
+        assert da.to_json() == db.to_json()
+        assert _sync_resource_cycles(a) == _sync_resource_cycles(b) > 0
+
+    def test_no_shipped_backend_uses_the_shim(self):
+        for b in list_backends():
+            assert isinstance(b.sync, SyncModel), b.name
+
+
+# --------------------------------------------------------------------------
+# Behavioral resource exhaustion (ISSUE acceptance criterion).
+# --------------------------------------------------------------------------
+
+class TestResourceExhaustion:
+    @pytest.fixture(scope="class")
+    def per_backend(self):
+        from conftest import COPYSTORM_HLO
+        svc = LeoService()
+        return {name: (an, svc.diagnose(COPYSTORM_HLO, backend=name))
+                for name, an in svc.compare_backends(COPYSTORM_HLO).items()}
+
+    def test_nvidia_exhausts_barrier_slots_intel_does_not(self, per_backend):
+        """8 in-flight async copies > 6 NVIDIA barrier slots but < 16 Intel
+        SWSB tokens: stall cycles and a SYNC_RESOURCE blame entry appear on
+        the NVIDIA-class backend only, naming the consumed instance."""
+        nv_an, nv_diag = per_backend["nvidia_gh200"]
+        it_an, it_diag = per_backend["intel_pvc"]
+
+        assert _sync_resource_cycles(nv_an) > 0
+        assert nv_an.blame.sync_resource, "missing SYNC_RESOURCE evidence"
+        worst = nv_an.blame.sync_resource[0]
+        assert worst.pool == "named_barrier"
+        assert worst.resource in {f"B{i}" for i in range(1, 7)}
+        assert worst.holder.startswith("main.1::cp")
+        # the Diagnosis names the same concrete instance
+        sr = nv_diag.sync_resources
+        assert sr["recorded"] and sr["contended"]
+        assert any(b["resource"] == worst.resource for b in sr["blame"])
+        nv_pool = next(p for p in sr["pools"]
+                       if p["pool"] == "named_barrier")
+        assert nv_pool["peak_in_flight"] == nv_pool["capacity"] == 6
+        assert nv_pool["evictions"] > 0
+
+        assert _sync_resource_cycles(it_an) == 0
+        assert not it_an.blame.sync_resource
+        assert not it_diag.sync_resources["contended"]
+
+    def test_amd_counter_aliasing_is_heaviest(self, per_backend):
+        """Two waitcnt counters < 6 barrier slots: the same storm must
+        serialize MORE on the AMD-class part than the NVIDIA-class part."""
+        amd_an, amd_diag = per_backend["amd_mi300a"]
+        nv_an, _ = per_backend["nvidia_gh200"]
+        amd_pool = next(p for p in amd_diag.sync_resources["pools"]
+                        if p["pool"] == "waitcnt_counter")
+        assert amd_pool["capacity"] == 2
+        assert amd_pool["evictions"] > 2
+        assert len(amd_an.blame.sync_resource) > \
+            len(nv_an.blame.sync_resource)
+
+    def test_tpu_contexts_absorb_the_storm(self, per_backend):
+        for name in ("tpu_v5e", "tpu_v5p", "tpu_v4"):
+            an, diag = per_backend[name]
+            assert _sync_resource_cycles(an) == 0
+            assert not diag.sync_resources["contended"]
+
+    def test_pressure_surfaces_in_markdown_and_llm_context(self,
+                                                           per_backend):
+        _, nv_diag = per_backend["nvidia_gh200"]
+        md = nv_diag.to_markdown()
+        assert "Sync-resource pressure" in md
+        assert "6/6 in flight" in md
+        ctx = nv_diag.to_llm_context("C+L(S)", code="src")
+        assert "sync-resource pressure" in ctx
+        assert "oversubscription" in ctx
+
+    def test_same_named_tags_in_different_computations_do_not_alias(self):
+        """Sync identifiers are instruction names, unique only per
+        computation: a callee re-using the entry's op names must claim its
+        own resources, not piggyback on the caller's live allocation."""
+        from repro.core import parse_hlo
+        from repro.core.sampler import VirtualSampler
+        hlo = """\
+HloModule alias_fixture
+
+%callee.1 (cp: f32[64,64]) -> f32[64,64] {
+  %cp = f32[64,64] parameter(0)
+  %cp0-start = (f32[64,64], f32[64,64], u32[]) copy-start(%cp)
+  ROOT %cp0-done = f32[64,64] copy-done(%cp0-start)
+}
+
+ENTRY %main.1 (arg0: f32[64,64]) -> f32[64,64] {
+  %arg0 = f32[64,64] parameter(0)
+  %cp0-start = (f32[64,64], f32[64,64], u32[]) copy-start(%arg0)
+  %inner = f32[64,64] call(%arg0), to_apply=%callee.1
+  %cp0-done = f32[64,64] copy-done(%cp0-start)
+  ROOT %out = f32[64,64] add(%cp0-done, %inner)
+}
+"""
+        module = parse_hlo(hlo)
+        backend = get_backend("nvidia_gh200")
+        sampler = VirtualSampler(module, backend.hw, sync=backend.sync)
+        sampler.run()
+        pool = sampler.scoreboard.report().pool("named_barrier")
+        # the callee's cp0-start claimed its OWN slot while the entry's
+        # was still in flight: 2 distinct acquisitions, peak 2
+        assert pool["acquisitions"] == 2
+        assert pool["peak_in_flight"] == 2
+
+    def test_sync_edges_annotated_with_instances(self, per_backend):
+        nv_an, _ = per_backend["nvidia_gh200"]
+        annotated = [e for e in nv_an.graph.edges
+                     if e.kind.is_sync and e.resource is not None]
+        assert annotated
+        assert all(e.resource.startswith("B") for e in annotated)
+        # the sync_edges pass exported per-instance edge counts
+        nv_pool = nv_an.sync_pressure.pool("named_barrier")
+        assert nv_pool["edges_per_instance"]
+        assert sum(nv_pool["edges_per_instance"].values()) == len(annotated)
+
+
+# --------------------------------------------------------------------------
+# Schema v2 migration (ISSUE satellite).
+# --------------------------------------------------------------------------
+
+class TestSchemaMigration:
+    def _v1_payload(self, async_hlo_text) -> dict:
+        an = analyze_hlo(async_hlo_text, hw="tpu_v5e",
+                         hints={"total_devices": 8})
+        data = Diagnosis.from_analysis(an).to_dict()
+        del data["sync_resources"]
+        data["schema_version"] = 1
+        return data
+
+    def test_v1_payload_migrates_with_not_recorded_default(self,
+                                                           async_hlo_text):
+        assert SCHEMA_VERSION == 2 and MIN_SCHEMA_VERSION == 1
+        diag = Diagnosis.from_dict(self._v1_payload(async_hlo_text))
+        assert diag.schema_version == SCHEMA_VERSION
+        assert diag.sync_resources["recorded"] is False
+        assert "not recorded" in diag.sync_resources["note"]
+        # migrated payloads re-serialize as v2 and round-trip exactly
+        assert Diagnosis.from_json(diag.to_json()) == diag
+
+    def test_newer_schema_still_rejected(self, async_hlo_text):
+        data = self._v1_payload(async_hlo_text)
+        data["schema_version"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema_version"):
+            Diagnosis.from_dict(data)
+        data["schema_version"] = 0
+        with pytest.raises(ValueError, match="schema_version"):
+            Diagnosis.from_dict(data)
+
+    def test_service_serves_migrated_v1_artifact_without_pipeline(
+            self, async_hlo_text, tmp_path):
+        """The diagnosis disk key deliberately excludes SCHEMA_VERSION, so
+        a schema-only bump keeps hitting pre-bump artifacts and migrates
+        them instead of re-running the pipeline."""
+        import gzip
+        svc = LeoService(cache_dir=str(tmp_path))
+        backend = svc.session.default_backend
+        dkey = svc._diagnosis_key(async_hlo_text, backend,
+                                  {"total_devices": 8}, 5, True)
+        path = svc.disk_cache._path("diagnoses", dkey, ".json.gz")
+        import os
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with gzip.open(path, "wt", encoding="utf-8") as f:
+            json.dump(self._v1_payload(async_hlo_text), f)
+        diag = svc.diagnose(async_hlo_text, hints={"total_devices": 8})
+        assert svc.stats.analyze_calls == 0       # served from disk
+        assert diag.schema_version == SCHEMA_VERSION
+        assert diag.sync_resources["recorded"] is False
+
+    def test_warm_disk_cache_with_v1_artifact_still_answers(
+            self, async_hlo_text, tmp_path):
+        """A disk tier written before the schema bump must read as a hit
+        (migrated), not crash or silently refuse the whole cache."""
+        import gzip
+        cache = DiskCache(str(tmp_path))
+        cache.store_diagnosis(
+            "k1", Diagnosis.from_dict(self._v1_payload(async_hlo_text)))
+        # rewrite the artifact as a genuine v1 payload
+        path = cache._path("diagnoses", "k1", ".json.gz")
+        data = self._v1_payload(async_hlo_text)
+        with gzip.open(path, "wt", encoding="utf-8") as f:
+            json.dump(data, f)
+        diag = cache.load_diagnosis("k1")
+        assert diag is not None
+        assert diag.sync_resources["recorded"] is False
+        assert cache.stats.diagnosis_hits == 1
