@@ -13,14 +13,19 @@
 #   make sync-smoke   — the SyncModel lane: scoreboard semantics/property
 #                       tests plus the per-backend divergence goldens
 #                       (resource-pressure snapshots incl. the copy-storm
-#                       cross-vendor blame divergence)
+#                       cross-vendor blame divergence and the wide-ops
+#                       issue-contention divergence)
+#   make bench-smoke  — the perf-trajectory lane: trimmed deterministic
+#                       benchmark subset; emits BENCH_pr4.json and fails
+#                       on >10% geomean-step-time regression vs the
+#                       committed benchmarks/baseline.json
 
 PY := python
 PYTEST_FLAGS := -x -q
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 quick bench serve-smoke sync-smoke
+.PHONY: tier1 quick bench serve-smoke sync-smoke bench-smoke
 
 tier1:
 	$(PY) -m pytest $(PYTEST_FLAGS)
@@ -31,13 +36,21 @@ quick:
 bench:
 	$(PY) -m benchmarks.run
 
+bench-smoke:
+	$(PY) -m benchmarks.bench_smoke --output BENCH_pr4.json
+
 sync-smoke:
 	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_syncmodel.py \
-		tests/test_backend_divergence.py
+		tests/test_issuemodel.py tests/test_backend_divergence.py
 
+# The decode demo is chained into the same && sequence as the analysis-
+# server runs: if it fails, the whole recipe's exit status carries the
+# failure (it used to sit on its own recipe line, where an intervening
+# `make -k` / prefix edit could silently drop its status before the
+# cache block ran).
 serve-smoke:
-	$(PY) examples/serve_demo.py
 	CACHE=$$(mktemp -d) && \
+	$(PY) examples/serve_demo.py && \
 	$(PY) -m repro.launch.analysis_server --smoke --requests 8 --slots 3 \
 		--backends all --cache-dir $$CACHE && \
 	$(PY) -m repro.launch.analysis_server --smoke --requests 8 --slots 3 \

@@ -1,0 +1,192 @@
+"""`bench-smoke`: the CI perf-trajectory lane (PR-4 satellite).
+
+A trimmed subset of the `benchmarks.run` suite: four Table-IV workload
+baselines (one per family — strided contraction, matmul chain,
+multi-stage, gather-heavy) plus the deterministic HLO fixture builders
+(async demo, copy storms, wide ops), fanned across every registered
+backend through one :class:`LeoService`.  The gated metric is the
+**geomean modeled step time per backend** — the same
+`estimated_step_seconds` the paper tables derive from — which is a pure
+function of the analytical model, so a >10% drift can only mean the
+model (sampler, issue model, sync scoreboard, backend constants)
+changed.  Intentional recalibrations re-baseline with
+``--update-baseline``; anything else is a perf regression CI should
+block.
+
+Wall-clock analysis time is also recorded (informational only — CI
+runners are too noisy to gate on).
+
+  PYTHONPATH=src python -m benchmarks.bench_smoke            # gate
+  PYTHONPATH=src python -m benchmarks.bench_smoke --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+DEFAULT_OUTPUT = "BENCH_pr4.json"
+DEFAULT_THRESHOLD = 0.10
+
+
+#: Table-IV workloads in the trimmed subset (one per family).
+TABLE4_SUBSET = ("LTIMES", "GEMM", "PRESSURE", "MASS3DEA")
+
+
+def workloads() -> Dict[str, str]:
+    """Deterministic named HLO workloads (shared fixture builders)."""
+    from repro.launch.analysis_server import (
+        copy_storm_hlo,
+        demo_hlo,
+        wide_ops_hlo,
+    )
+    return {
+        "demo_async_128": demo_hlo(seed=0, n=128, trips=5),
+        "demo_async_192": demo_hlo(seed=1, n=192, trips=8),
+        "copystorm_8": copy_storm_hlo(8),
+        "copystorm_12": copy_storm_hlo(12),
+        "wide_ops_12": wide_ops_hlo(),
+    }
+
+
+def table4_hlo() -> Dict[str, str]:
+    """Compiled baseline HLO for the trimmed Table-IV workload subset
+    (jax compiles each stage once; ~seconds)."""
+    import jax
+
+    from benchmarks.workloads import build_suite
+    out: Dict[str, str] = {}
+    for w in build_suite():
+        if w.name not in TABLE4_SUBSET:
+            continue
+        for i, (fn, args) in enumerate(w.baseline):
+            hlo = jax.jit(fn).lower(*args).compile().as_text()
+            out[f"table4_{w.name}_s{i}"] = hlo
+    return out
+
+
+def run_bench() -> Dict[str, object]:
+    from repro.core import LeoService
+
+    service = LeoService()
+    loads = dict(workloads())
+    loads.update(table4_hlo())
+    backends = sorted(b.name for b in service.session.backends)
+    per_backend: Dict[str, Dict[str, float]] = {}
+    t0 = time.perf_counter()
+    for name, hlo in loads.items():
+        diags = service.diagnose_fanout(hlo, hints={"total_devices": 8})
+        for backend, diag in diags.items():
+            per_backend.setdefault(backend, {})[name] = \
+                diag.estimated_step_seconds
+    wall = time.perf_counter() - t0
+
+    geomeans = {
+        backend: math.exp(sum(math.log(t) for t in times.values())
+                          / len(times))
+        for backend, times in per_backend.items()
+    }
+    return {
+        "schema": 1,
+        "metric": "geomean_estimated_step_seconds",
+        "workloads": sorted(loads),
+        "backends": backends,
+        "geomean_estimated_step_seconds": {
+            b: geomeans[b] for b in sorted(geomeans)},
+        "per_workload_seconds": {
+            b: dict(sorted(per_backend[b].items()))
+            for b in sorted(per_backend)},
+        "wall_seconds_informational": wall,
+    }
+
+
+def compare(result: Dict[str, object], baseline: Dict[str, object],
+            threshold: float) -> List[str]:
+    """Drift beyond the threshold in EITHER direction, as messages.
+
+    The metric is a deterministic modeled quantity, so an unexplained
+    speedup is model drift too — letting it pass would bank headroom
+    that masks a later genuine slowdown.  Intentional changes
+    re-baseline with ``--update-baseline``."""
+    failures = []
+    base = baseline.get("geomean_estimated_step_seconds", {})
+    got = result["geomean_estimated_step_seconds"]
+    for backend in sorted(base):
+        if backend not in got:
+            failures.append(f"{backend}: present in baseline but not in "
+                            f"this run (backend vanished?)")
+            continue
+        ratio = got[backend] / base[backend]
+        if ratio > 1.0 + threshold:
+            failures.append(
+                f"{backend}: geomean step time {got[backend]:.4e}s is "
+                f"{(ratio - 1.0) * 100:.1f}% slower than baseline "
+                f"{base[backend]:.4e}s (gate: {threshold * 100:.0f}%)")
+        elif ratio < 1.0 - threshold:
+            failures.append(
+                f"{backend}: geomean step time {got[backend]:.4e}s is "
+                f"{(1.0 - ratio) * 100:.1f}% FASTER than baseline "
+                f"{base[backend]:.4e}s — unexplained model drift; if "
+                f"intentional, re-baseline with --update-baseline")
+    for backend in sorted(set(got) - set(base)):
+        failures.append(
+            f"{backend}: not in the committed baseline — its perf "
+            f"trajectory is untracked; add it with --update-baseline")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--output", default=DEFAULT_OUTPUT,
+                    help="result JSON path (uploaded as a CI artifact)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline JSON to gate against")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="allowed slowdown fraction (default 0.10)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this run "
+                         "(intentional recalibration) instead of gating")
+    args = ap.parse_args(argv)
+
+    result = run_bench()
+    with open(args.output, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.output} "
+          f"({len(result['backends'])} backends x "
+          f"{len(result['workloads'])} workloads in "
+          f"{result['wall_seconds_informational']:.2f}s)")
+    for backend, geo in result["geomean_estimated_step_seconds"].items():
+        print(f"  {backend:<16s} geomean est. step {geo:.4e}s")
+
+    if args.update_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"ERROR: no baseline at {args.baseline}; commit one with "
+              f"--update-baseline", file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(result, baseline, args.threshold)
+    if failures:
+        print("PERF REGRESSION vs committed baseline:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"perf gate OK: no backend >"
+          f"{args.threshold * 100:.0f}% slower than baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

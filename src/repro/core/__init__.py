@@ -67,7 +67,12 @@ from .backends import (
     resolve_backend,
     resolve_sync_model,
 )
-from .blame import BlameResult, SyncResourceBlame, attribute_blame
+from .blame import (
+    BlameResult,
+    SchedulerContentionBlame,
+    SyncResourceBlame,
+    attribute_blame,
+)
 from .cct import build_cct, format_hot_path
 from .collectives import (
     collective_operand_bytes,
@@ -79,10 +84,12 @@ from .depgraph import DependencyGraph, Edge, build_dependency_graph
 from .hlo_parser import HloParser, parse_hlo
 from .hwmodel import (
     HARDWARE_MODELS,
+    SINGLE_ISSUE,
     TPU_V4,
     TPU_V5E,
     TPU_V5P,
     HardwareModel,
+    IssueModel,
     get_hardware_model,
 )
 from .isa import (
@@ -117,7 +124,12 @@ from .report import (
     structured_report,
 )
 from .roofline import RooflineReport, compute_roofline
-from .sampler import StallProfile, VirtualSampler, sample
+from .sampler import (
+    IssuePressureReport,
+    StallProfile,
+    VirtualSampler,
+    sample,
+)
 from .service import AnalyzeRequest, LeoService
 from .session import LeoSession, SessionStats
 from .slicing import StallChain, top_chains
@@ -131,8 +143,10 @@ __all__ = [
     "DiskCache", "LRUCache",
     # session facade
     "LeoSession", "SessionStats",
-    # backend registry + sync resources
+    # backend registry + sync resources + issue model
     "Backend", "BackendRegistry", "DEFAULT_SYNC_MODEL", "REGISTRY",
+    "IssueModel", "IssuePressureReport", "SINGLE_ISSUE",
+    "SchedulerContentionBlame",
     "SyncModel", "SyncPressureReport", "SyncResourceBlame",
     "SyncResourcePool", "SyncScoreboard", "SyncSemantics",
     "UnknownBackendError", "get_backend", "list_backends",

@@ -24,10 +24,10 @@ models) plus NVIDIA-, AMD- and Intel-class parts — so
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, Iterator, List, Mapping, Optional, Tuple, Union
 
-from ..hwmodel import HardwareModel
+from ..hwmodel import SINGLE_ISSUE, HardwareModel, IssueModel
 from ..isa import StallClass, SyncKind
 from .syncmodel import (
     DEFAULT_SYNC_MODEL,
@@ -65,6 +65,23 @@ class Backend:
 
     def taxonomy_table(self) -> Dict[str, str]:
         return {cls.value: name for cls, name in self.stall_taxonomy.items()}
+
+    @property
+    def issue(self) -> IssueModel:
+        """The hardware model's issue-stream descriptor."""
+        return getattr(self.hw, "issue", SINGLE_ISSUE) or SINGLE_ISSUE
+
+    def with_issue(self, issue: IssueModel,
+                   name: Optional[str] = None) -> "Backend":
+        """Derive a backend with a different issue model (e.g. the K=1
+        single-stream variant anchoring the pre-multi-stream goldens).
+        The derived descriptor gets a distinct name — covering every
+        IssueModel field, policy included — so session/service caches
+        (keyed on backend name) cannot alias two variants."""
+        derived = name or (f"{self.name}@q{issue.queues}x{issue.width}-"
+                           f"{issue.policy}")
+        return _dc_replace(self, name=derived,
+                           hw=_dc_replace(self.hw, issue=issue))
 
 
 class UnknownBackendError(KeyError):
@@ -173,7 +190,8 @@ GENERIC_TAXONOMY: Mapping[StallClass, str] = {
 from . import amd, intel, nvidia, tpu  # noqa: E402,F401  (registration side effect)
 
 __all__ = [
-    "Backend", "BackendRegistry", "BackendLike",
+    "Backend", "BackendRegistry", "BackendLike", "IssueModel",
+    "SINGLE_ISSUE",
     "DEFAULT_SYNC_MODEL", "SyncAcquire", "SyncLike", "SyncModel",
     "SyncPressureReport", "SyncResourcePool", "SyncScoreboard",
     "SyncSemantics", "resolve_sync_model",

@@ -7,12 +7,19 @@ waitcnt tracing reproduces exactly (§III-E oldest-(M-N) rule).
 """
 from __future__ import annotations
 
-from ..hwmodel import HardwareModel
+from ..hwmodel import HardwareModel, IssueModel
 from ..isa import StallClass, SyncKind
 from . import Backend, SyncModel, SyncResourcePool, register_backend
 
+# Four SIMD units per CU; the CU front-end rotates across them round-robin
+# (one SIMD considered per cycle), so a ready wave on a busy SIMD waits for
+# its slot even when a sibling SIMD idles — rocprofiler's
+# `arbiter_not_selected`.
+AMD_ISSUE = IssueModel(queues=4, width=1, policy="round_robin")
+
 AMD_MI300A = HardwareModel(
     name="amd_mi300a",
+    issue=AMD_ISSUE,
     peak_flops_bf16=980e12,          # CDNA3 matrix-core bf16
     peak_flops_f32=122e12,           # vector fp32
     hbm_bw=5300e9,                   # HBM3, widest in class
@@ -49,15 +56,19 @@ ROCM_TAXONOMY = {
 # all route onto those two counters — independent streams beyond two alias
 # a counter, and a drain on the shared counter serializes both (§III-E).
 # The single workgroup s_barrier is an execution barrier, not a transfer-
-# tracking resource; it is declared but nothing routes to it.
+# tracking resource; it is declared but nothing routes to it.  The waitcnt
+# counters are per-wave (`scope="queue"`): every SIMD's wave slot tracks
+# its own vmcnt/lgkmcnt, so pressure is per issue queue, while the
+# workgroup s_barrier stays device-global.
 AMD_SYNC = SyncModel(
     pools=(SyncResourcePool(
                name="waitcnt_counter", kind=SyncKind.WAITCNT,
                label="s_waitcnt memory counters",
-               instances=("vmcnt", "lgkmcnt")),
+               instances=("vmcnt", "lgkmcnt"), scope="queue"),
            SyncResourcePool(
                name="s_barrier", kind=SyncKind.BARRIER,
-               label="workgroup s_barrier", instances=("s_barrier",))),
+               label="workgroup s_barrier", instances=("s_barrier",),
+               scope="device")),
     routing={SyncKind.BARRIER: "waitcnt_counter",
              SyncKind.WAITCNT: "waitcnt_counter",
              SyncKind.TOKEN: "waitcnt_counter"},

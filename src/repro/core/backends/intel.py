@@ -8,12 +8,19 @@ software scoreboarding — the token-threading mechanism LEO traces (§III-E).
 """
 from __future__ import annotations
 
-from ..hwmodel import HardwareModel
+from ..hwmodel import HardwareModel, IssueModel
 from ..isa import StallClass, SyncKind
 from . import Backend, SyncModel, SyncResourcePool, register_backend
 
+# Eight Xe vector engines per Xe-core, each co-issuing to paired
+# vector/matrix ports (width 2): the widest issue fabric of the three
+# GPU-class parts — wide independent-op workloads that choke a 4-queue
+# part sail through here (the PR-4 wide-ops divergence golden).
+INTEL_ISSUE = IssueModel(queues=8, width=2, policy="round_robin")
+
 INTEL_PVC = HardwareModel(
     name="intel_pvc",
+    issue=INTEL_ISSUE,
     peak_flops_bf16=839e12,          # XMX bf16, Max 1550-class
     peak_flops_f32=52e12,            # vector fp32
     hbm_bw=3280e9,                   # HBM2e
@@ -50,13 +57,17 @@ LEVELZERO_TAXONOMY = {
 # (the cross-vendor divergence the §VI case study reports).  The 32
 # per-subslice named barriers exist but carry execution barriers, not
 # transfer tracking.
+# SWSB scoreboard IDs are per-thread (`scope="queue"`): each hardware
+# thread's compiler allocates its own $0-$15, so under multi-queue issue
+# every queue owns a private token file; the subslice named barriers are
+# shared (`scope="device"`).
 INTEL_SYNC = SyncModel(
     pools=(SyncResourcePool.counted(
                "swsb_token", SyncKind.TOKEN, "SWSB scoreboard IDs $0-$15",
-               "$", 16),
+               "$", 16, scope="queue"),
            SyncResourcePool.counted(
                "named_barrier", SyncKind.BARRIER,
-               "subslice named barriers", "nbar", 32)),
+               "subslice named barriers", "nbar", 32, scope="device")),
     routing={SyncKind.BARRIER: "swsb_token",
              SyncKind.WAITCNT: "swsb_token",
              SyncKind.TOKEN: "swsb_token"},

@@ -8,12 +8,18 @@ LEO's barrier tracing models (§III-E).
 """
 from __future__ import annotations
 
-from ..hwmodel import HardwareModel
+from ..hwmodel import HardwareModel, IssueModel
 from ..isa import StallClass, SyncKind
 from . import Backend, SyncModel, SyncResourcePool, register_backend
 
+# Four warp schedulers per SM, greedy-then-oldest arbitration (GTO): a
+# ready warp waits only when every scheduler is occupied, and that wait is
+# what CUPTI reports as `not_selected`.
+NVIDIA_ISSUE = IssueModel(queues=4, width=1, policy="greedy_oldest")
+
 NVIDIA_GH200 = HardwareModel(
     name="nvidia_gh200",
+    issue=NVIDIA_ISSUE,
     peak_flops_bf16=989e12,          # dense tensor-core bf16
     peak_flops_f32=67e12,            # CUDA-core fp32 vector path
     hbm_bw=4000e9,                   # HBM3e, GH200-class
@@ -46,11 +52,13 @@ CUPTI_TAXONOMY = {
 
 # Every §III-E mechanism the unified IR records rides the B1-B6 named
 # barriers on an NVIDIA-class part: 7+ async copies in flight oversubscribe
-# and serialize (the paper's oldest-(M-N) rule).
+# and serialize (the paper's oldest-(M-N) rule).  The pool is CTA-scoped
+# (`scope="device"`): all four warp schedulers allocate from the SAME six
+# barriers, so multi-queue issue does not relieve barrier pressure.
 NVIDIA_SYNC = SyncModel(
     pools=(SyncResourcePool.counted(
         "named_barrier", SyncKind.BARRIER, "named barriers B1-B6",
-        "B", 6, start=1),),
+        "B", 6, start=1, scope="device"),),
     routing={SyncKind.BARRIER: "named_barrier",
              SyncKind.WAITCNT: "named_barrier",
              SyncKind.TOKEN: "named_barrier"},

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import warnings
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from ..isa import SyncKind
@@ -53,20 +53,45 @@ _MAX_EVENTS_PER_POOL = 64
 # Descriptors (immutable).
 # --------------------------------------------------------------------------
 
+#: Valid sync-resource pool scopes (see :class:`SyncResourcePool.scope`).
+POOL_SCOPES: Tuple[str, ...] = ("device", "queue")
+
+
 @dataclass(frozen=True)
 class SyncResourcePool:
-    """A finite, named set of physical sync-resource instances."""
+    """A finite, named set of physical sync-resource instances.
+
+    ``scope`` says how the pool replicates under a multi-queue issue model
+    (:class:`~repro.core.hwmodel.IssueModel`):
+
+    * ``"device"`` — one physical pool shared by every issue queue.  This
+      is NVIDIA's named barriers (CTA-scoped: all four warp schedulers of
+      an SM allocate from the same B1-B6) and the TPU pools (per-core
+      resources behind a single VLIW stream).
+    * ``"queue"``  — each issue queue owns a private copy of the pool.
+      This is AMD's ``s_waitcnt`` counters (architecturally per-wave:
+      every wave slot tracks its own vmcnt/lgkmcnt) and Intel's SWSB
+      scoreboard IDs (per-thread).
+
+    With a single issue queue the distinction vanishes — both scopes
+    behave as one pool, which is what keeps K=1 profiles byte-identical
+    to the pre-multi-stream sampler.
+    """
 
     name: str                   # registry key, e.g. "named_barrier"
     kind: SyncKind              # native mechanism this pool implements
     label: str                  # human label, e.g. "named barriers B1-B6"
     instances: Tuple[str, ...]  # concrete instance names; len == capacity
+    scope: str = "device"       # "device" (shared) | "queue" (per-queue)
 
     def __post_init__(self) -> None:
         if not self.instances:
             raise ValueError(f"pool {self.name!r} needs >= 1 instance")
         if len(set(self.instances)) != len(self.instances):
             raise ValueError(f"pool {self.name!r} has duplicate instances")
+        if self.scope not in POOL_SCOPES:
+            raise ValueError(f"pool {self.name!r} scope {self.scope!r} not "
+                             f"in {POOL_SCOPES}")
 
     @property
     def capacity(self) -> int:
@@ -74,10 +99,12 @@ class SyncResourcePool:
 
     @classmethod
     def counted(cls, name: str, kind: SyncKind, label: str, prefix: str,
-                capacity: int, start: int = 0) -> "SyncResourcePool":
+                capacity: int, start: int = 0,
+                scope: str = "device") -> "SyncResourcePool":
         return cls(name=name, kind=kind, label=label,
                    instances=tuple(f"{prefix}{i}"
-                                   for i in range(start, start + capacity)))
+                                   for i in range(start, start + capacity)),
+                   scope=scope)
 
 
 @dataclass(frozen=True)
@@ -156,8 +183,14 @@ class SyncModel:
 
     # -- factories -------------------------------------------------------------
 
-    def scoreboard(self, realloc_cycles: float = 0.0) -> "SyncScoreboard":
-        return SyncScoreboard(self, realloc_cycles=realloc_cycles)
+    def scoreboard(self, realloc_cycles: float = 0.0,
+                   queues: int = 1) -> "SyncScoreboard":
+        """Mint a stateful allocator; ``queues`` > 1 replicates every
+        ``scope="queue"`` pool per issue queue (ROADMAP's "one scoreboard
+        per simulated core/queue") while ``scope="device"`` pools stay
+        shared."""
+        return SyncScoreboard(self, realloc_cycles=realloc_cycles,
+                              queues=queues)
 
     @classmethod
     def from_semantics(cls, sem: "SyncSemantics") -> "SyncModel":
@@ -297,9 +330,11 @@ class _PoolBoard:
     """Allocator state for one pool: never exceeds capacity; exhaustion
     serializes against the oldest in-flight allocation (§III-E)."""
 
-    def __init__(self, spec: SyncResourcePool, realloc_cycles: float = 0.0):
+    def __init__(self, spec: SyncResourcePool, realloc_cycles: float = 0.0,
+                 queue: Optional[int] = None):
         self.spec = spec
         self.realloc_cycles = realloc_cycles
+        self.queue = queue     # replica index when the pool is queue-scoped
         self._free: List[str] = list(spec.instances)
         self._live: "OrderedDict[str, _Alloc]" = OrderedDict()
         self.acquisitions = 0
@@ -339,11 +374,14 @@ class _PoolBoard:
         if stall > 0:
             self.contention_cycles += stall * weight
             if len(self.events) < _MAX_EVENTS_PER_POOL:
-                self.events.append({
+                ev = {
                     "consumer": consumer, "instance": old.instance,
                     "holder": old.holder, "evicted_tag": old_tag,
                     "stall_cycles": stall, "at": now, "weight": weight,
-                })
+                }
+                if self.queue is not None:
+                    ev["queue"] = self.queue
+                self.events.append(ev)
         self._live[tag] = _Alloc(tag=tag, instance=old.instance,
                                  holder=consumer, busy_until=now + stall)
         self.peak_in_flight = max(self.peak_in_flight, len(self._live))
@@ -372,7 +410,7 @@ class _PoolBoard:
 
     def fork(self) -> "_PoolBoard":
         """Copy the mutable allocator state; the spec is shared."""
-        clone = _PoolBoard(self.spec, self.realloc_cycles)
+        clone = _PoolBoard(self.spec, self.realloc_cycles, queue=self.queue)
         clone._free = list(self._free)
         clone._live = OrderedDict(
             (tag, _Alloc(tag=a.tag, instance=a.instance, holder=a.holder,
@@ -405,19 +443,38 @@ class _PoolBoard:
 class SyncScoreboard:
     """Stateful allocator over every pool of one :class:`SyncModel`.
 
-    One scoreboard per simulated device/stream.  All methods take the
-    *abstract* kind recorded in the IR; routing picks the physical pool.
-    Tags are namespaced by kind so barrier and token identifiers sharing a
-    pool cannot collide.
+    One scoreboard per simulated device; with ``queues > 1`` every
+    ``scope="queue"`` pool is replicated per issue queue (ROADMAP's "one
+    scoreboard per simulated core/queue") — its instances are exposed as
+    ``q<i>:<name>`` — while ``scope="device"`` pools keep a single board
+    every queue allocates from.  All methods take the *abstract* kind
+    recorded in the IR; routing picks the physical pool, and ``queue``
+    picks the replica (ignored for device-scoped pools).  Tags are
+    namespaced by kind so barrier and token identifiers sharing a pool
+    cannot collide; a live tag is always found on whichever replica holds
+    it, so counter-style re-arms land on their original board regardless
+    of the issuing queue.
     """
 
-    def __init__(self, model: SyncModel, realloc_cycles: float = 0.0):
+    def __init__(self, model: SyncModel, realloc_cycles: float = 0.0,
+                 queues: int = 1):
+        if queues < 1:
+            raise ValueError(f"queues must be >= 1, got {queues}")
         self.model = model
         self.realloc_cycles = realloc_cycles
-        self._boards: Dict[str, _PoolBoard] = {
-            p.name: _PoolBoard(p, realloc_cycles) for p in model.pools}
+        self.queues = queues
+        self._boards: Dict[str, List[_PoolBoard]] = {}
+        for p in model.pools:
+            if p.scope == "queue" and queues > 1:
+                self._boards[p.name] = [
+                    _PoolBoard(_dc_replace(p, instances=tuple(
+                        f"q{i}:{inst}" for inst in p.instances)),
+                        realloc_cycles, queue=i)
+                    for i in range(queues)]
+            else:
+                self._boards[p.name] = [_PoolBoard(p, realloc_cycles)]
 
-    def _board(self, kind: SyncKind) -> Optional[_PoolBoard]:
+    def _pool_boards(self, kind: SyncKind) -> Optional[List[_PoolBoard]]:
         pool = self.model.pool_for(kind)
         return self._boards[pool.name] if pool is not None else None
 
@@ -425,42 +482,64 @@ class SyncScoreboard:
     def _key(kind: SyncKind, tag: str) -> str:
         return f"{kind.value}:{tag}"
 
+    @staticmethod
+    def _holding(boards: List[_PoolBoard], key: str) -> Optional[_PoolBoard]:
+        for b in boards:
+            if key in b._live:
+                return b
+        return None
+
     # -- allocation lifecycle --------------------------------------------------
 
     def acquire(self, kind: SyncKind, tag: str, consumer: str = "",
-                now: float = 0.0, weight: float = 1.0
-                ) -> Optional[SyncAcquire]:
-        board = self._board(kind)
-        if board is None:
+                now: float = 0.0, weight: float = 1.0,
+                queue: int = 0) -> Optional[SyncAcquire]:
+        boards = self._pool_boards(kind)
+        if boards is None:
             return None
-        return board.acquire(kind, self._key(kind, tag), consumer, now,
-                             weight)
+        key = self._key(kind, tag)
+        # a live tag re-armed from another queue is a counter increment on
+        # the replica that holds it, not a fresh allocation elsewhere
+        board = self._holding(boards, key) or boards[queue % len(boards)]
+        return board.acquire(kind, key, consumer, now, weight)
 
     def complete(self, kind: SyncKind, tag: str, t: float) -> None:
-        board = self._board(kind)
+        boards = self._pool_boards(kind)
+        if boards is None:
+            return
+        board = self._holding(boards, self._key(kind, tag))
         if board is not None:
             board.complete(self._key(kind, tag), t)
 
     def retire(self, kind: SyncKind, tag: str,
                drain_to: Optional[int] = None) -> bool:
-        board = self._board(kind)
+        boards = self._pool_boards(kind)
+        if boards is None:
+            return False
+        board = self._holding(boards, self._key(kind, tag))
         if board is None:
             return False
         return board.retire(self._key(kind, tag), drain_to=drain_to)
 
     # -- introspection ---------------------------------------------------------
 
-    def in_flight(self, kind: SyncKind) -> int:
-        board = self._board(kind)
-        return board.in_flight if board is not None else 0
+    def in_flight(self, kind: SyncKind, queue: Optional[int] = None) -> int:
+        boards = self._pool_boards(kind)
+        if boards is None:
+            return 0
+        if queue is not None and len(boards) > 1:
+            return boards[queue % len(boards)].in_flight
+        return sum(b.in_flight for b in boards)
 
     def peak(self, kind: SyncKind) -> int:
-        board = self._board(kind)
-        return board.peak_in_flight if board is not None else 0
+        boards = self._pool_boards(kind)
+        return max((b.peak_in_flight for b in boards), default=0) \
+            if boards is not None else 0
 
     @property
     def total_in_flight(self) -> int:
-        return sum(b.in_flight for b in self._boards.values())
+        return sum(b.in_flight for boards in self._boards.values()
+                   for b in boards)
 
     def fork(self) -> "SyncScoreboard":
         """Independent copy of the mutable allocator state, sharing the
@@ -469,14 +548,68 @@ class SyncScoreboard:
         clone = SyncScoreboard.__new__(SyncScoreboard)
         clone.model = self.model
         clone.realloc_cycles = self.realloc_cycles
-        clone._boards = {name: board.fork()
-                         for name, board in self._boards.items()}
+        clone.queues = self.queues
+        clone._boards = {name: [b.fork() for b in boards]
+                         for name, boards in self._boards.items()}
         return clone
 
     def report(self) -> "SyncPressureReport":
         return SyncPressureReport(pools=[
-            self._boards[p.name].snapshot(self.model.serves(p.name))
-            for p in self.model.pools])
+            self._pool_snapshot(p) for p in self.model.pools])
+
+    def _pool_snapshot(self, pool: SyncResourcePool) -> Dict[str, Any]:
+        boards = self._boards[pool.name]
+        serves = self.model.serves(pool.name)
+        if len(boards) == 1:
+            snap = boards[0].snapshot(serves)
+            snap["scope"] = pool.scope
+            snap["queues"] = 1
+            return snap
+        # merge per-queue replicas: capacity stays the per-queue capacity
+        # (the §III-E oversubscription threshold a single stream sees),
+        # instances carry the q<i>: prefix, counters aggregate, and the
+        # per_queue breakdown preserves each replica's pressure.
+        snaps = [b.snapshot(serves) for b in boards]
+        # Every per-board field must be merged explicitly below (sum, max,
+        # or concat is a semantic choice a generic fold cannot make);
+        # fail loudly if _PoolBoard.snapshot grows a field this merge
+        # doesn't know, instead of silently dropping it from multi-queue
+        # reports only.
+        unmerged = set(snaps[0]) - {
+            "pool", "kind", "label", "capacity", "instances", "serves",
+            "acquisitions", "peak_in_flight", "in_flight_at_end",
+            "evictions", "contention_cycles", "events"}
+        if unmerged:
+            raise AssertionError(
+                f"_PoolBoard.snapshot grew fields {sorted(unmerged)} that "
+                f"the multi-queue merge does not aggregate; extend "
+                f"SyncScoreboard._pool_snapshot")
+        merged: Dict[str, Any] = {
+            "pool": pool.name,
+            "kind": pool.kind.value,
+            "label": pool.label,
+            "capacity": pool.capacity,
+            "instances": [i for s in snaps for i in s["instances"]],
+            "serves": [k.value for k in serves],
+            "acquisitions": sum(s["acquisitions"] for s in snaps),
+            "peak_in_flight": max(s["peak_in_flight"] for s in snaps),
+            "in_flight_at_end": sum(s["in_flight_at_end"] for s in snaps),
+            "evictions": sum(s["evictions"] for s in snaps),
+            "contention_cycles": sum(s["contention_cycles"] for s in snaps),
+            "events": [e for s in snaps for e in s["events"]],
+            "scope": pool.scope,
+            "queues": len(boards),
+            "per_queue": [{
+                "queue": i,
+                "acquisitions": s["acquisitions"],
+                "peak_in_flight": s["peak_in_flight"],
+                "evictions": s["evictions"],
+                "contention_cycles": s["contention_cycles"],
+            } for i, s in enumerate(snaps)],
+        }
+        merged["events"].sort(key=lambda e: (e.get("at", 0.0),
+                                             e.get("consumer", "")))
+        return merged
 
 
 # --------------------------------------------------------------------------

@@ -27,16 +27,20 @@ TPU_TAXONOMY = {
 # by its own finite pool: async start/done pairs ride per-core async copy
 # contexts, Pallas DMA streams ride hardware semaphores, and token threads
 # ride in-flight token registers.  Routing is the identity — TPU is the
-# only backend where no mechanism is emulated on another's resource.
+# only backend where no mechanism is emulated on another's resource.  All
+# three pools are per-core device resources behind the single VLIW issue
+# stream (`scope="device"`; the issue model is `queues=1`, so scoping is
+# moot today but documented for when Megacore-style dual streams land).
 TPU_SYNC = SyncModel(
     pools=(SyncResourcePool.counted(
                "async_context", SyncKind.BARRIER, "async copy contexts",
-               "ctx", 32),
+               "ctx", 32, scope="device"),
            SyncResourcePool.counted(
                "dma_semaphore", SyncKind.WAITCNT, "Pallas DMA semaphores",
-               "sem", 16),
+               "sem", 16, scope="device"),
            SyncResourcePool.counted(
-               "token_slot", SyncKind.TOKEN, "XLA token slots", "tok", 8)),
+               "token_slot", SyncKind.TOKEN, "XLA token slots", "tok", 8,
+               scope="device")),
     routing={SyncKind.BARRIER: "async_context",
              SyncKind.WAITCNT: "dma_semaphore",
              SyncKind.TOKEN: "token_slot"},

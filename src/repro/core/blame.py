@@ -103,6 +103,21 @@ class SyncResourceBlame:
 
 
 @dataclass
+class SchedulerContentionBlame:
+    """One issue-port arbitration loss: `consumer` was data-ready but queue
+    `queue`'s issue slot was still occupied by `holder` — charged as
+    `not_selected` (different execution pipe: the scheduler picked other
+    work) or `pipe_busy` (same pipe: the functional unit is saturated)."""
+
+    consumer: str
+    holder: str        # qualified instruction occupying the issue slot
+    queue: int         # issue queue index
+    pipe: str          # consumer's execution-pipe family (mxu/vpu/lsu/...)
+    stall_class: str   # "not_selected" | "pipe_busy"
+    cycles: float
+
+
+@dataclass
 class BlameResult:
     entries: List[BlameEntry] = field(default_factory=list)
     by_producer: Dict[str, float] = field(default_factory=dict)
@@ -117,6 +132,11 @@ class BlameResult:
     # cycles already attributed through entries/self_blame (the same cycles
     # viewed through the resource lens), so conservation still holds.
     sync_resource: List[SyncResourceBlame] = field(default_factory=list)
+    # Scheduler-contention evidence channel: issue-port arbitration events
+    # from the multi-stream sampler (NOT_SELECTED / PIPE_BUSY cycles viewed
+    # through the queue lens); same conservation caveat as sync_resource.
+    scheduler_contention: List[SchedulerContentionBlame] = \
+        field(default_factory=list)
 
     @property
     def total_attributed(self) -> float:
@@ -138,6 +158,7 @@ _SELF_SUBCATEGORY = {
     StallClass.COLLECTIVE_WAIT: "collective wait",
     StallClass.FETCH: "instruction fetch",
     StallClass.PIPE_BUSY: "pipeline contention",
+    StallClass.NOT_SELECTED: "scheduler contention",
 }
 
 
@@ -173,7 +194,22 @@ class BlameAttributor:
             self._attribute(result, qualified, rec.latency_samples, edges)
         self._occupancy_blame(result)
         self._sync_resource_blame(result)
+        self._scheduler_contention_blame(result)
         return result
+
+    def _scheduler_contention_blame(self, result: BlameResult) -> None:
+        """Surface issue-port arbitration events as a typed evidence
+        channel naming the queue and the occupying instruction."""
+        pressure = getattr(self.profile, "issue_pressure", None)
+        if pressure is None:
+            return
+        for ev in getattr(pressure, "events", []):
+            result.scheduler_contention.append(SchedulerContentionBlame(
+                consumer=ev["consumer"], holder=ev.get("holder") or "",
+                queue=ev.get("queue", 0), pipe=ev.get("pipe", ""),
+                stall_class=ev["stall_class"],
+                cycles=ev["stall_cycles"] * ev.get("weight", 1.0)))
+        result.scheduler_contention.sort(key=lambda b: -b.cycles)
 
     def _sync_resource_blame(self, result: BlameResult) -> None:
         """Surface scoreboard oversubscription events (§III-E) as a typed

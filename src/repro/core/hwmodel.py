@@ -14,10 +14,65 @@ deliverable mandates (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
 
 from .isa import Instruction, OpClass
+
+#: Scheduler policies an :class:`IssueModel` can declare.
+ISSUE_POLICIES: Tuple[str, ...] = ("round_robin", "greedy_oldest")
+
+
+@dataclass(frozen=True)
+class IssueModel:
+    """Per-vendor issue-stream model (the multi-stream sampler's contract).
+
+    ``queues``  — concurrent issue queues (warp schedulers on NVIDIA-class
+                  parts, SIMD units per CU on AMD-class parts, Xe vector
+                  engines on Intel-class parts; 1 = the in-order VLIW
+                  single stream of a TPU core).
+    ``width``   — issue slots per queue (co-issue ports).
+    ``policy``  — how ready instructions map onto queues:
+                  ``round_robin``   static cyclic assignment (AMD's SIMD
+                                    rotation; an instruction waits for
+                                    *its* queue even if others are idle);
+                  ``greedy_oldest`` work-conserving greedy-then-oldest
+                                    arbitration (NVIDIA GTO): an
+                                    instruction waits only when every
+                                    queue is busy.
+
+    With ``ports == 1`` the sampler degenerates *byte-identically* to the
+    single-stream in-order model (the parity anchor for every pre-existing
+    golden): a lone in-order stream has no arbitration, so no
+    ``not_selected`` / ``pipe_busy`` samples are ever charged.
+    """
+
+    queues: int = 1
+    width: int = 1
+    policy: str = "round_robin"
+
+    def __post_init__(self) -> None:
+        if self.queues < 1:
+            raise ValueError(f"queues must be >= 1, got {self.queues}")
+        if self.width < 1:
+            raise ValueError(f"width must be >= 1, got {self.width}")
+        if self.policy not in ISSUE_POLICIES:
+            raise ValueError(
+                f"unknown issue policy {self.policy!r}; known: "
+                f"{ISSUE_POLICIES}")
+
+    @property
+    def ports(self) -> int:
+        """Total concurrent issue slots (queues x width)."""
+        return self.queues * self.width
+
+    @property
+    def multi_stream(self) -> bool:
+        return self.ports > 1
+
+
+#: The degenerate single-stream model: one in-order queue, one slot.
+SINGLE_ISSUE = IssueModel(queues=1, width=1, policy="round_robin")
 
 
 @dataclass(frozen=True)
@@ -43,6 +98,9 @@ class HardwareModel:
     # instruction serializes against the oldest holder and pays this
     # additional drain/re-arm latency on top of the holder's remaining time.
     sync_realloc_cycles: float = 4.0
+    # Concurrent issue-queue model driving the multi-stream sampler; the
+    # default is the degenerate single in-order stream.
+    issue: IssueModel = field(default=SINGLE_ISSUE)
 
     @property
     def ici_bw_total(self) -> float:
@@ -127,8 +185,14 @@ class HardwareModel:
         return self.issue_overhead_cycles + self.latency_seconds(instr) * self.clock_hz
 
 
+# TPU cores are in-order VLIW: the compiler schedules one bundle stream,
+# so the issue model is the degenerate single queue (scheduler-contention
+# stalls structurally cannot occur — the compiler already serialized).
+TPU_ISSUE = SINGLE_ISSUE
+
 TPU_V5E = HardwareModel(
     name="tpu_v5e",
+    issue=TPU_ISSUE,
     peak_flops_bf16=197e12,
     peak_flops_f32=98.5e12,
     hbm_bw=819e9,
@@ -144,6 +208,7 @@ TPU_V5E = HardwareModel(
 
 TPU_V5P = HardwareModel(
     name="tpu_v5p",
+    issue=TPU_ISSUE,
     peak_flops_bf16=459e12,
     peak_flops_f32=229.5e12,
     hbm_bw=2765e9,
@@ -159,6 +224,7 @@ TPU_V5P = HardwareModel(
 
 TPU_V4 = HardwareModel(
     name="tpu_v4",
+    issue=TPU_ISSUE,
     peak_flops_bf16=275e12,
     peak_flops_f32=137.5e12,
     hbm_bw=1228e9,

@@ -347,4 +347,10 @@ STALL_COMPATIBLE_PRODUCERS: Dict[StallClass, Tuple[OpClass, ...]] = {
         OpClass.SYNC_SET, OpClass.SYNC_WAIT, OpClass.COLLECTIVE,
         OpClass.MEMORY_LOAD, OpClass.MEMORY_STORE, OpClass.DATA_MOVEMENT,
     ),
+    # Scheduler-contention classes are caused by the issue arbiter, not by
+    # any data producer: no producer OpClass can explain them, so an edge
+    # whose consumer shows ONLY these classes is Stage-1 prunable (the
+    # stall self-blames into the scheduler-contention evidence channel).
+    StallClass.NOT_SELECTED: (),
+    StallClass.PIPE_BUSY: (),
 }

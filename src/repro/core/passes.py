@@ -62,6 +62,9 @@ class LeoAnalysis:
     # counts from the sync_edges pass; None when the pipeline ran without
     # the sync_edges pass or the backend declares no resource pools.
     sync_pressure: Optional[Any] = None
+    # Per-queue issue-port pressure (IssuePressureReport) from the
+    # sampler's multi-stream issue model; None for measured profiles.
+    issue_pressure: Optional[Any] = None
 
     @property
     def estimated_step_seconds(self) -> float:
@@ -163,7 +166,8 @@ class AnalysisContext:
             sync_edges_added=self.sync_edges_added or 0,
             analysis_seconds=analysis_seconds, backend=self.backend,
             pass_seconds={s.name: s.seconds for s in self.pass_stats},
-            sync_pressure=self.sync_pressure)
+            sync_pressure=self.sync_pressure,
+            issue_pressure=getattr(self.profile, "issue_pressure", None))
 
 
 class PipelineOrderError(ValueError):
@@ -257,7 +261,12 @@ class SyncEdgesPass(AnalysisPass):
 
     def run(self, ctx: AnalysisContext) -> None:
         sync = getattr(ctx.backend, "sync", None)
-        ctx.sync_edges_added = add_sync_edges(ctx.graph, sync=sync)
+        assignment = getattr(ctx.profile, "sync_assignment", None) \
+            if ctx.profile is not None else None
+        queues = getattr(ctx.backend, "issue", None)
+        ctx.sync_edges_added = add_sync_edges(
+            ctx.graph, sync=sync, assignment=assignment,
+            queues=queues.queues if queues is not None else 1)
         ctx.sync_pressure = self._pressure_report(ctx, sync)
 
     def _pressure_report(self, ctx: AnalysisContext, sync):
@@ -266,8 +275,12 @@ class SyncEdgesPass(AnalysisPass):
         report = getattr(ctx.profile, "sync_pressure", None) \
             if ctx.profile is not None else None
         if report is None:
-            # measured profile (or sample pass removed): static-only view
-            report = sync.scoreboard().report()
+            # measured profile (or sample pass removed): static-only view,
+            # minted at the backend's queue count so its instance
+            # namespace matches the q-prefixed edge annotations
+            issue = getattr(ctx.backend, "issue", None)
+            report = sync.scoreboard(
+                queues=issue.queues if issue is not None else 1).report()
         by_instance: Dict[str, int] = {}
         for e in ctx.graph.edges:
             if e.kind.is_sync and e.resource is not None:

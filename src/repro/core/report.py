@@ -45,10 +45,11 @@ from .isa import EdgeKind, Instruction, OpClass, StallClass
 #: Version stamped into every serialized Diagnosis / AnalyzeRequest; readers
 #: reject (treat as cache miss) payloads from a newer schema generation.
 #: v2 added the ``sync_resources`` section (§III-E finite sync-resource
-#: pressure); v1 payloads are still readable — ``from_dict`` migrates them
-#: with an explicit "not recorded" default, so a warm disk cache survives
-#: the bump.
-SCHEMA_VERSION = 2
+#: pressure); v3 added the ``issue_pressure`` section (multi-stream
+#: issue-queue / scheduler-contention pressure).  Older payloads are still
+#: readable — ``from_dict`` migrates them with explicit "not recorded"
+#: defaults, so a warm disk cache survives each bump.
+SCHEMA_VERSION = 3
 
 #: Oldest payload generation ``Diagnosis.from_dict`` can migrate forward.
 MIN_SCHEMA_VERSION = 1
@@ -57,6 +58,12 @@ MIN_SCHEMA_VERSION = 1
 SYNC_RESOURCES_NOT_RECORDED = {
     "recorded": False,
     "note": "not recorded (schema version 1 payload)",
+}
+
+#: The ``issue_pressure`` default filled into migrated pre-v3 payloads.
+ISSUE_PRESSURE_NOT_RECORDED = {
+    "recorded": False,
+    "note": "not recorded (pre-v3 schema payload)",
 }
 
 
@@ -213,6 +220,13 @@ class Diagnosis:
     # instances, or {"recorded": False, ...} when the analysis carried none.
     sync_resources: Dict[str, Any] = field(
         default_factory=lambda: dict(SYNC_RESOURCES_NOT_RECORDED))
+    # Multi-stream issue-queue pressure (schema v3): the backend's
+    # IssueModel (queues/width/policy), per-queue occupancy, and
+    # scheduler-contention (not_selected / pipe_busy) cycles + events, or
+    # {"recorded": False, ...} when the analysis carried none (measured
+    # profiles, pre-v3 payloads).
+    issue_pressure: Dict[str, Any] = field(
+        default_factory=lambda: dict(ISSUE_PRESSURE_NOT_RECORDED))
     schema_version: int = SCHEMA_VERSION
 
     # -- construction ----------------------------------------------------------
@@ -268,6 +282,17 @@ class Diagnosis:
                 {"consumer": b.consumer, "resource": b.resource,
                  "pool": b.pool, "holder": b.holder, "cycles": b.cycles}
                 for b in getattr(analysis.blame, "sync_resource", [])[:10]]
+        issue_pressure: Dict[str, Any] = dict(ISSUE_PRESSURE_NOT_RECORDED)
+        ipressure = getattr(analysis, "issue_pressure", None)
+        if ipressure is not None:
+            issue_pressure = {"recorded": True}
+            issue_pressure.update(ipressure.to_dict())
+            issue_pressure["blame"] = [
+                {"consumer": b.consumer, "holder": b.holder,
+                 "queue": b.queue, "pipe": b.pipe,
+                 "stall_class": b.stall_class, "cycles": b.cycles}
+                for b in getattr(analysis.blame,
+                                 "scheduler_contention", [])[:10]]
         return cls(
             backend=analysis.hw.name,
             module_name=analysis.module.name,
@@ -296,6 +321,7 @@ class Diagnosis:
             stall_taxonomy=(backend.taxonomy_table()
                             if backend is not None else None),
             sync_resources=sync_resources,
+            issue_pressure=issue_pressure,
         )
 
     # -- serialization ---------------------------------------------------------
@@ -327,6 +353,7 @@ class Diagnosis:
             "root_causes": self.root_causes,
             "self_blame": self.self_blame,
             "sync_resources": self.sync_resources,
+            "issue_pressure": self.issue_pressure,
             "recommendations": [r.to_dict() for r in self.recommendations],
         })
         return out
@@ -338,12 +365,16 @@ class Diagnosis:
             raise ValueError(
                 f"Diagnosis schema_version {version} outside supported "
                 f"range [{MIN_SCHEMA_VERSION}, {SCHEMA_VERSION}]")
-        # Graceful migration: v1 payloads (pre-sync_resources) read fine —
-        # a warm disk cache survives the schema bump with an explicit
-        # "not recorded" default instead of a reject.
+        # Graceful migration: v1 payloads (pre-sync_resources) and v2
+        # payloads (pre-issue_pressure) read fine — a warm disk cache
+        # survives each schema bump with an explicit "not recorded"
+        # default instead of a reject.
         sync_resources = data.get("sync_resources")
         if sync_resources is None:
             sync_resources = dict(SYNC_RESOURCES_NOT_RECORDED)
+        issue_pressure = data.get("issue_pressure")
+        if issue_pressure is None:
+            issue_pressure = dict(ISSUE_PRESSURE_NOT_RECORDED)
         cov = data.get("single_dependency_coverage", {})
         return cls(
             backend=data["backend"],
@@ -362,6 +393,7 @@ class Diagnosis:
             vendor=data.get("vendor"),
             stall_taxonomy=data.get("stall_taxonomy"),
             sync_resources=sync_resources,
+            issue_pressure=issue_pressure,
             schema_version=SCHEMA_VERSION,
         )
 
@@ -410,6 +442,32 @@ class Diagnosis:
                 f"({b['cycles']:,.0f} cycles)")
         return lines
 
+    def _issue_pressure_lines(self) -> List[str]:
+        """Human-readable scheduler-contention lines ("4 issue queues,
+        12,345 not_selected cycles") shared by markdown and LLM views."""
+        ip = self.issue_pressure or {}
+        if not ip.get("recorded") or not ip.get("contended"):
+            return []
+        lines = [
+            f"{ip.get('queues', 1)} issue queue(s) x width "
+            f"{ip.get('width', 1)} ({ip.get('policy', '?')}): "
+            f"{ip.get('not_selected_cycles', 0.0):,.0f} not_selected + "
+            f"{ip.get('pipe_busy_cycles', 0.0):,.0f} pipe_busy stall cycles"
+        ]
+        for q in ip.get("per_queue", []):
+            contention = (q.get("not_selected_cycles", 0.0)
+                          + q.get("pipe_busy_cycles", 0.0))
+            if contention > 0:
+                lines.append(
+                    f"queue {q['queue']}: {q.get('issued', 0.0):,.0f} issues"
+                    f", {contention:,.0f} contention cycles")
+        for b in ip.get("blame", [])[:3]:
+            lines.append(
+                f"`{b['consumer']}` lost queue {b['queue']} arbitration to "
+                f"`{b['holder']}` ({b['stall_class']}, "
+                f"{b['cycles']:,.0f} cycles)")
+        return lines
+
     def to_markdown(self) -> str:
         """Human-readable report (the profiler-UI rendering)."""
         lines = [
@@ -442,6 +500,10 @@ class Diagnosis:
         if sync_lines:
             lines += ["", "## Sync-resource pressure (§III-E)", ""]
             lines += [f"- {l}" for l in sync_lines]
+        issue_lines = self._issue_pressure_lines()
+        if issue_lines:
+            lines += ["", "## Issue-queue contention", ""]
+            lines += [f"- {l}" for l in issue_lines]
         if self.recommendations:
             lines += ["", "## Recommendations", ""]
             for r in self.recommendations:
@@ -477,6 +539,10 @@ class Diagnosis:
             if sync_lines:
                 lines.append("#### Vendor sync-resource pressure")
                 lines += [f"- {l}" for l in sync_lines]
+            issue_lines = self._issue_pressure_lines()
+            if issue_lines:
+                lines.append("#### Issue-queue (scheduler) contention")
+                lines += [f"- {l}" for l in issue_lines]
             lines.append("#### Recommendations")
             for r in self.recommendations:
                 lines.append(f"- [{r.action}] {r.reason} "

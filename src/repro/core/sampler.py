@@ -29,18 +29,58 @@ On real hardware, `StallProfile` can instead be populated from measured
 xplane/profiler data — everything downstream of this interface is unchanged
 (the paper's modular "hpcanalysis" boundary).
 
+Multi-stream issue (the GPA-style scheduler model): each backend's
+:class:`~repro.core.hwmodel.IssueModel` declares K concurrent issue queues
+of a given width plus a scheduler policy (static ``round_robin`` vs
+work-conserving ``greedy_oldest``).  Independently-schedulable instructions
+interleave across queues, each queue drives its own per-queue view of the
+backend's :class:`~repro.core.backends.SyncScoreboard` (pools replicate or
+stay device-global per their declared scope), and *issue-port contention*
+— an instruction whose operands are ready but whose queue is still
+occupied — is charged as `StallClass.NOT_SELECTED` (occupant on a
+different execution pipe: the arbiter picked other work) or
+`StallClass.PIPE_BUSY` (occupant on the same pipe: the functional unit
+itself is saturated).  With one single-width queue there is no
+arbitration, so the model degenerates *byte-identically* to the in-order
+single-stream simulator — the parity anchor for all pre-multi-stream
+goldens.
+
 Known simplifications (mirroring paper §Limitations): branch probabilities
-are not modeled (all `conditional` branches simulate as executed); the
-in-order single-stream model cannot produce `not_selected`/`pipe_busy`
-stalls, so the taxonomy's those buckets stay empty on simulated profiles.
+are not modeled (all `conditional` branches simulate as executed); on a
+``queues=1, width=1`` backend (the TPUs' in-order VLIW stream) the
+`not_selected`/`pipe_busy` buckets stay structurally empty.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-from .hwmodel import HardwareModel
+from .hwmodel import HardwareModel, IssueModel, SINGLE_ISSUE
 from .isa import Instruction, Module, OpClass, StallClass, SyncKind
+
+#: Issue-port contention events retained per report (aggregate counters
+#: keep accumulating past the cap), mirroring the sync scoreboard's cap.
+_MAX_ISSUE_EVENTS = 64
+
+#: Execution-pipe families used to split port contention into
+#: `pipe_busy` (same pipe saturated) vs `not_selected` (arbitration loss).
+_PIPE_OF = {
+    OpClass.MATMUL: "mxu",
+    OpClass.COMPUTE: "vpu",
+    OpClass.REDUCE: "vpu",
+    OpClass.FUSION: "vpu",
+    OpClass.MEMORY_LOAD: "lsu",
+    OpClass.MEMORY_STORE: "lsu",
+    OpClass.DATA_MOVEMENT: "lsu",
+    OpClass.SYNC_SET: "lsu",
+    OpClass.SYNC_WAIT: "lsu",
+    OpClass.COLLECTIVE: "ici",
+}
+
+
+def pipe_of(instr: Instruction) -> str:
+    """Execution-pipe family an instruction occupies."""
+    return _PIPE_OF.get(instr.op_class, "ctl")
 
 
 def classify_blocker(consumer: Instruction,
@@ -92,6 +132,134 @@ class PCSampleRecord:
 
 
 @dataclass
+class IssuePressureReport:
+    """Per-queue issue-port pressure (JSON-pure, Diagnosis-embeddable).
+
+    The scheduler-contention counterpart of
+    :class:`~repro.core.backends.SyncPressureReport`: per queue, how much
+    work it issued, how long it was occupied, and how many cycles ready
+    instructions spent losing arbitration (`not_selected`) or waiting on a
+    saturated execution pipe (`pipe_busy`), plus capped per-event detail
+    naming the blocking occupant.
+    """
+
+    queues: int = 1
+    width: int = 1
+    policy: str = "round_robin"
+    per_queue: List[Dict[str, Any]] = field(default_factory=list)
+    events: List[Dict[str, Any]] = field(default_factory=list)
+
+    @property
+    def not_selected_cycles(self) -> float:
+        return sum(q.get("not_selected_cycles", 0.0) for q in self.per_queue)
+
+    @property
+    def pipe_busy_cycles(self) -> float:
+        return sum(q.get("pipe_busy_cycles", 0.0) for q in self.per_queue)
+
+    @property
+    def contention_cycles(self) -> float:
+        return self.not_selected_cycles + self.pipe_busy_cycles
+
+    @property
+    def contended(self) -> bool:
+        return self.contention_cycles > 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "queues": self.queues,
+            "width": self.width,
+            "policy": self.policy,
+            "contended": self.contended,
+            "contention_cycles": self.contention_cycles,
+            "not_selected_cycles": self.not_selected_cycles,
+            "pipe_busy_cycles": self.pipe_busy_cycles,
+            "per_queue": self.per_queue,
+            "events": self.events,
+        }
+
+
+class _IssueState:
+    """Mutable per-run collector behind an :class:`IssuePressureReport`."""
+
+    def __init__(self, issue: IssueModel):
+        self.issue = issue
+        k = issue.queues
+        self.issued = [0.0] * k
+        self.busy_cycles = [0.0] * k
+        self.not_selected = [0.0] * k
+        self.pipe_busy = [0.0] * k
+        self.events: List[Dict[str, Any]] = []
+
+    def note_issue(self, queue: int, weight: float, cost: float) -> None:
+        self.issued[queue] += weight
+        self.busy_cycles[queue] += weight * cost
+
+    def note_contention(self, queue: int, cls: StallClass, cycles: float,
+                        weight: float, consumer: str, holder: Optional[str],
+                        pipe: str, at: float) -> None:
+        if cls is StallClass.PIPE_BUSY:
+            self.pipe_busy[queue] += cycles * weight
+        else:
+            self.not_selected[queue] += cycles * weight
+        if len(self.events) < _MAX_ISSUE_EVENTS:
+            self.events.append({
+                "consumer": consumer, "holder": holder or "",
+                "queue": queue, "pipe": pipe, "stall_class": cls.value,
+                "stall_cycles": cycles, "at": at, "weight": weight,
+            })
+
+    def report(self) -> IssuePressureReport:
+        return IssuePressureReport(
+            queues=self.issue.queues, width=self.issue.width,
+            policy=self.issue.policy,
+            per_queue=[{
+                "queue": i,
+                "issued": self.issued[i],
+                "busy_cycles": self.busy_cycles[i],
+                "not_selected_cycles": self.not_selected[i],
+                "pipe_busy_cycles": self.pipe_busy[i],
+            } for i in range(self.issue.queues)],
+            events=list(self.events))
+
+
+class _Ports:
+    """Issue slots of one simulated computation activation: K queues of
+    `width` slots each, every slot tracking when it frees and what
+    occupies it.  One activation's ports are independent of its callees'
+    (a `call`/`while` op occupies its caller's slot for the whole body)."""
+
+    def __init__(self, issue: IssueModel, t0: float):
+        self.issue = issue
+        n = issue.queues * issue.width
+        self.free = [t0] * n
+        self.occupant: List[Optional[str]] = [None] * n
+        self.pipe: List[Optional[str]] = [None] * n
+        self._rr = 0
+
+    def pick(self) -> int:
+        """Choose a slot per the scheduler policy; returns its index."""
+        w = self.issue.width
+        if self.issue.policy == "greedy_oldest":
+            # work-conserving: the earliest-freeing slot anywhere
+            return min(range(len(self.free)), key=lambda i: (self.free[i], i))
+        # static round-robin queue assignment; earliest slot within it
+        q = self._rr % self.issue.queues
+        self._rr += 1
+        base = q * w
+        return min(range(base, base + w), key=lambda i: (self.free[i], i))
+
+    def queue_of(self, slot: int) -> int:
+        return slot // self.issue.width
+
+    def occupy(self, slot: int, until: float, qualified: str,
+               pipe: str) -> None:
+        self.free[slot] = until
+        self.occupant[slot] = qualified
+        self.pipe[slot] = pipe
+
+
+@dataclass
 class StallProfile:
     hw_name: str
     records: Dict[str, PCSampleRecord] = field(default_factory=dict)
@@ -101,6 +269,14 @@ class StallProfile:
     # profile was produced by a sampler driving a SyncModel scoreboard;
     # None for measured profiles and sync-less backends.
     sync_pressure: Optional[object] = None
+    # Per-queue issue-port pressure (IssuePressureReport) when produced by
+    # the virtual sampler; None for measured profiles.
+    issue_pressure: Optional[object] = None
+    # (SyncKind, computation, tag) -> concrete resource instance actually
+    # assigned by the sampler's scoreboard; consumed by the sync_edges
+    # pass so static edge annotations name the same hardware the dynamic
+    # SYNC_RESOURCE events blame.  None for measured profiles.
+    sync_assignment: Optional[Dict] = None
 
     @property
     def makespan_seconds(self) -> float:
@@ -131,6 +307,8 @@ class VirtualSampler:
     def __init__(self, module: Module, hw: HardwareModel, sync=None):
         self.module = module
         self.hw = hw
+        self.issue: IssueModel = getattr(hw, "issue", SINGLE_ISSUE) \
+            or SINGLE_ISSUE
         # Optional backend SyncModel (duck-typed to avoid an import cycle
         # with repro.core.backends).  Two behaviors: the async_collectives
         # knob (vendors whose collectives block the issuing queue, e.g.
@@ -139,13 +317,17 @@ class VirtualSampler:
         # that serializes oversubscribed sync resources (§III-E): an async
         # start with every barrier slot / waitcnt counter / SWSB token in
         # flight inherits the oldest holder's remaining latency, recorded
-        # as SYNC_RESOURCE stall cycles.
+        # as SYNC_RESOURCE stall cycles.  Under a multi-queue issue model
+        # the scoreboard replicates queue-scoped pools per queue.
         self.sync = sync
         self.scoreboard = None
         if sync is not None and hasattr(sync, "scoreboard") \
                 and getattr(sync, "pools", ()):
             self.scoreboard = sync.scoreboard(
-                realloc_cycles=getattr(hw, "sync_realloc_cycles", 0.0))
+                realloc_cycles=getattr(hw, "sync_realloc_cycles", 0.0),
+                queues=self.issue.queues)
+        self._istate = _IssueState(self.issue)
+        self._assignment: Dict[Tuple[SyncKind, str, str], str] = {}
 
     # -- public ---------------------------------------------------------------
 
@@ -157,6 +339,8 @@ class VirtualSampler:
         profile.makespan_cycles = makespan
         if self.scoreboard is not None:
             profile.sync_pressure = self.scoreboard.report()
+            profile.sync_assignment = dict(self._assignment)
+        profile.issue_pressure = self._istate.report()
         self._seed_unsampled(profile)
         return profile
 
@@ -169,9 +353,11 @@ class VirtualSampler:
         """Simulate one computation; returns its end time (cycles)."""
         if depth > 32:
             return t0
-        t = t0
         local_env = env
         params = {p.name: p for p in comp.parameters}
+        ports = _Ports(self.issue, t0)
+        multi = self.issue.multi_stream
+        end = t0
         for instr in comp.instructions:
             q = instr.qualified_name
             if instr.op_class in (OpClass.PARAMETER, OpClass.CONSTANT):
@@ -182,22 +368,40 @@ class VirtualSampler:
 
             ready, blocker = self._ready_time(comp, instr, local_env, params,
                                               loop_ctx, t0)
-            data_ready = max(t, ready)
+            slot = ports.pick()
+            pf = ports.free[slot]
+            data_ready = max(pf, ready)
+            qidx = ports.queue_of(slot)
             res_ready, res_blocker, acquired = self._acquire_sync(
-                board, instr, q, data_ready, mult)
+                board, instr, q, data_ready, mult, queue=qidx)
             issue_at = max(data_ready, res_ready)
-            stall = issue_at - t
             rec = profile.record(q)
             rec.exec_count += mult
             issue_cost = self._issue_cycles(instr, env, profile, issue_at,
                                             mult, depth, board)
-            rec.total_samples += mult * (stall + issue_cost)
-            data_stall = data_ready - t
+            # Stall anatomy: data wait (measured from when the issue slot
+            # freed — the single-stream convention), issue-port contention
+            # (data ready, slot busy; only meaningful with >1 port: a lone
+            # in-order stream has no arbiter to lose), and sync-resource
+            # serialization on top.
+            data_stall = max(0.0, ready - pf)
+            port_stall = max(0.0, pf - ready) if multi else 0.0
+            res_stall = issue_at - data_ready
+            rec.total_samples += mult * (data_stall + port_stall + res_stall
+                                         + issue_cost)
             if data_stall > 0:
                 cls = classify_blocker(instr, blocker)
                 rec.add_stall(cls, mult * data_stall,
                               blocker.qualified_name if blocker else None)
-            res_stall = issue_at - data_ready
+            if port_stall > 0:
+                pipe = pipe_of(instr)
+                occupant = ports.occupant[slot]
+                cls = StallClass.PIPE_BUSY if ports.pipe[slot] == pipe \
+                    else StallClass.NOT_SELECTED
+                rec.add_stall(cls, mult * port_stall, occupant)
+                self._istate.note_contention(qidx, cls, port_stall, mult,
+                                             consumer=q, holder=occupant,
+                                             pipe=pipe, at=ready)
             if res_stall > 0:
                 rec.add_stall(StallClass.SYNC_RESOURCE, mult * res_stall,
                               res_blocker)
@@ -207,11 +411,21 @@ class VirtualSampler:
             local_env[q] = completion
             for kind, tag in acquired:
                 board.complete(kind, tag, completion)
-            t = issue_at + issue_cost
-        return t
+            ports.occupy(slot, issue_at + issue_cost, q, pipe_of(instr))
+            # Control ops' issue_cost is their simulated body's makespan;
+            # the body's own instructions already charge their queues'
+            # occupancy, so the wrapper records an issue event but no
+            # busy cycles (otherwise per-queue busy would double-count
+            # and could exceed the makespan on loop-heavy programs).
+            self._istate.note_issue(
+                qidx, mult,
+                0.0 if instr.opcode in ("while", "call", "conditional")
+                else issue_cost)
+            end = max(end, issue_at + issue_cost)
+        return end
 
     def _acquire_sync(self, board, instr: Instruction, q: str, now: float,
-                      mult: float):
+                      mult: float, queue: int = 0):
         """Retire waited resources and claim set ones on the scoreboard.
 
         Returns (resource_ready, blocking holder qualified-name or None,
@@ -231,10 +445,11 @@ class VirtualSampler:
         for tag in si.sets:
             scoped = f"{scope}::{tag}"
             acq = board.acquire(si.kind, scoped, consumer=q, now=now,
-                                weight=mult)
+                                weight=mult, queue=queue)
             if acq is None:
                 continue
             acquired.append((si.kind, scoped))
+            self._assignment[(si.kind, scope, tag)] = acq.instance
             if acq.available_at > res_ready:
                 res_ready = acq.available_at
                 res_blocker = acq.evicted_holder
@@ -328,14 +543,20 @@ class VirtualSampler:
         trips = max(1, instr.trip_count)
 
         # Pass A (warm-up): no loop-carried availability info.  Runs on a
-        # forked scoreboard so warm-up allocations cannot pollute the
-        # steady-state pressure stats.
+        # forked scoreboard and a scratch issue-pressure collector so
+        # warm-up allocations/contention cannot pollute the steady-state
+        # pressure stats.
         warm = StallProfile(hw_name=self.hw.name, clock_hz=self.hw.clock_hz)
         env_a: Dict[str, float] = {}
-        end_a = self._simulate(body, issue_at, env_a, 1.0, warm, depth + 1,
-                               loop_ctx={},
-                               board=board.fork() if board is not None
-                               else None)
+        saved_istate = self._istate
+        self._istate = _IssueState(self.issue)
+        try:
+            end_a = self._simulate(body, issue_at, env_a, 1.0, warm,
+                                   depth + 1, loop_ctx={},
+                                   board=board.fork() if board is not None
+                                   else None)
+        finally:
+            self._istate = saved_istate
         makespan_a = max(end_a - issue_at, 1.0)
 
         # Steady-state loop context: slot value available at

@@ -49,7 +49,11 @@ from .session import LeoSession, ModuleLike, SessionStats
 #: v2: the sampler now drives a SyncModel scoreboard (finite §III-E sync
 #: resources serialize), changing stall profiles for oversubscribed
 #: programs.
-DIAGNOSIS_KEY_VERSION = 2
+#: v3: multi-stream issue model — the sampler interleaves instructions
+#: across the backend's issue queues (per-queue sync scoreboards,
+#: NOT_SELECTED/PIPE_BUSY contention), changing stall profiles and
+#: makespans for every multi-queue backend.
+DIAGNOSIS_KEY_VERSION = 3
 
 
 @dataclass

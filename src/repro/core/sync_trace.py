@@ -47,18 +47,25 @@ ResourceAssignment = Dict[Tuple[SyncKind, str, str], str]
 _SKIP_KINDS = ("fusion", "reduce", "loop_cond")
 
 
-def assign_sync_resources(module: Module, sync) -> ResourceAssignment:
+def assign_sync_resources(module: Module, sync,
+                          queues: int = 1) -> ResourceAssignment:
     """Replay the module's sync ops against a logical scoreboard, mapping
     every set identifier to the physical resource instance it lands on.
 
     The replay follows the sampler's execution order — entry computation,
     recursing into called computations at their call sites — so instance
     assignments match the dynamic scoreboard's and the edge annotations
-    name the same hardware as the SYNC_RESOURCE stall events.
+    name the same hardware as the SYNC_RESOURCE stall events.  ``queues``
+    must match the backend's issue-queue count: the replay itself issues
+    everything on queue 0 (it has no port-assignment model), but the
+    scoreboard's queue-scoped pools then mint instance names in the same
+    ``q<i>:...`` namespace the multi-queue pressure report uses, so even
+    computations only the replay reaches (fusion bodies) get annotations
+    that exist in the report.
     """
     if sync is None or not getattr(sync, "pools", ()):
         return {}
-    board = sync.scoreboard()
+    board = sync.scoreboard(queues=queues)
     assign: ResourceAssignment = {}
     visited: Set[str] = set()
 
@@ -92,13 +99,25 @@ def assign_sync_resources(module: Module, sync) -> ResourceAssignment:
     return assign
 
 
-def add_sync_edges(graph: DependencyGraph, sync=None) -> int:
+def add_sync_edges(graph: DependencyGraph, sync=None,
+                   assignment: Optional[ResourceAssignment] = None,
+                   queues: int = 1) -> int:
     """Extend `graph` with §III-E synchronization edges.  Returns # added.
 
     ``sync`` (a backend ``SyncModel``) enables per-edge resource-instance
-    annotation via :func:`assign_sync_resources`.
+    annotation via :func:`assign_sync_resources` (``queues`` = the
+    backend's issue-queue count, so replay-minted names share the
+    report's namespace).  ``assignment`` — the sampler's
+    dynamically-recorded tag->instance map
+    (``StallProfile.sync_assignment``) — overlays the static replay where
+    present, so under a multi-queue issue model the edge annotations name
+    the exact per-queue instance the dynamic scoreboard used; computations
+    the sampler never schedules (fusion bodies) keep the replay's
+    assignment.
     """
-    assign = assign_sync_resources(graph.module, sync)
+    assign = assign_sync_resources(graph.module, sync, queues=queues)
+    if assignment:
+        assign.update(assignment)
     n = 0
     n += _trace_barriers(graph, assign)
     n += _trace_waitcnt(graph, assign)

@@ -198,6 +198,54 @@ def copy_storm_hlo(n_copies: int = 8, dim: int = 512) -> str:
             f"f32[{dim},{dim}] {{\n" + "\n".join(lines) + "\n}\n")
 
 
+def wide_ops_hlo(n_streams: int = 12, depth: int = 3, dim: int = 256) -> str:
+    """Wide independent-ops demo trace (the multi-stream issue fixture):
+    `n_streams` dependency-free chains of `depth` elementwise/matmul ops,
+    emitted round-robin so adjacent instructions belong to different
+    chains.  Every chain is ready at t=0, so the program's ILP is bounded
+    only by the backend's issue fabric: a narrow-issue part (4 queues)
+    charges heavy `not_selected`/`pipe_busy` scheduler-contention cycles,
+    a wide one (16 ports) issues the whole front cleanly, and a
+    single-stream in-order part (TPU VLIW) structurally cannot emit those
+    classes at all — the cross-vendor divergence the single-stream sampler
+    could never show.  Chains alternate VPU (multiply) and MXU (dot) work
+    so the contention splits between `not_selected` (arbitration loss to
+    a different pipe) and `pipe_busy` (same pipe saturated).  Shared by
+    the divergence goldens and the bench-smoke lane — keep them in sync
+    when changing it."""
+    lines = ["  %arg0 = f32[{d},{d}] parameter(0)".format(d=dim)]
+    chains = []
+    for i in range(n_streams):
+        mxu = i % 2 == 1    # odd chains run on the matmul pipe
+        ops = []
+        prev = "arg0"
+        for j in range(depth):
+            name = f"c{i}_{j}"
+            op = (f"  %{name} = f32[{dim},{dim}] "
+                  + (f"dot(%{prev}, %{prev}), lhs_contracting_dims={{1}}, "
+                     f"rhs_contracting_dims={{0}}"
+                     if mxu else f"multiply(%{prev}, %{prev})")
+                  + f', metadata={{op_name="jit(step)/wide/chain{i}/op{j}"}}')
+            ops.append(op)
+            prev = name
+        chains.append(ops)
+    # round-robin interleave: instruction k of every chain before k+1
+    for j in range(max(len(c) for c in chains)):
+        for c in chains:
+            if j < len(c):
+                lines.append(c[j])
+    # reduction-tree tail joining the chains into one root
+    acc = "c0_%d" % (depth - 1)
+    for i in range(1, n_streams):
+        lines.append(f"  %j{i} = f32[{dim},{dim}] "
+                     f"add(%{acc}, %c{i}_{depth - 1})")
+        acc = f"j{i}"
+    lines.append(f"  ROOT %out = f32[{dim},{dim}] negate(%{acc})")
+    return (f"HloModule fixture_wideops\n\nENTRY %main.1 "
+            f"(arg0: f32[{dim},{dim}]) -> f32[{dim},{dim}] {{\n"
+            + "\n".join(lines) + "\n}\n")
+
+
 def _load_hlo(path: str) -> str:
     if path.endswith(".gz"):
         with gzip.open(path, "rt") as f:

@@ -1,0 +1,295 @@
+"""Unit tests for the multi-stream issue model (PR-4 tentpole).
+
+Covers `IssueModel` validation, `Backend.with_issue` derivation, the
+sampler's port arbitration (concurrent issue shortens makespans; port
+waits classify as `pipe_busy` vs `not_selected` by the occupant's
+execution pipe; K=1 records neither), the per-queue `issue_pressure`
+report, the `BlameResult.scheduler_contention` evidence channel, and
+service-cache non-aliasing between issue variants of one backend.
+"""
+import json
+
+import pytest
+
+from repro.core import (
+    LeoService,
+    SINGLE_ISSUE,
+    IssueModel,
+    StallClass,
+    get_backend,
+    parse_hlo,
+)
+from repro.core.sampler import VirtualSampler, pipe_of
+
+
+def _variant(queues, width=1, policy="round_robin", base="tpu_v5e"):
+    return get_backend(base).with_issue(
+        IssueModel(queues=queues, width=width, policy=policy),
+        name=f"{base}@test-q{queues}w{width}{policy[0]}")
+
+
+def _hlo(ops):
+    """Tiny single-computation module from a list of op lines."""
+    body = "\n".join(f"  {line}" for line in ops)
+    return (f"HloModule issue_unit\n\nENTRY %main.1 (a: f32[64,64]) -> "
+            f"f32[64,64] {{\n  %a = f32[64,64] parameter(0)\n{body}\n}}\n")
+
+
+#: Four independent same-pipe (VPU) multiplies, then a reduction tail.
+WIDE4 = _hlo([
+    "%m0 = f32[64,64] multiply(%a, %a)",
+    "%m1 = f32[64,64] multiply(%a, %a)",
+    "%m2 = f32[64,64] multiply(%a, %a)",
+    "%m3 = f32[64,64] multiply(%a, %a)",
+    "%s1 = f32[64,64] add(%m0, %m1)",
+    "%s2 = f32[64,64] add(%s1, %m2)",
+    "ROOT %s3 = f32[64,64] add(%s2, %m3)",
+])
+
+#: A slow MXU op first, then two independent VPU ops: on 2 round-robin
+#: queues the third op is assigned behind the dot — a different pipe, so
+#: its wait is an arbitration loss (`not_selected`).
+MIXED3 = _hlo([
+    "%d0 = f32[64,64] dot(%a, %a), lhs_contracting_dims={1}, "
+    "rhs_contracting_dims={0}",
+    "%m1 = f32[64,64] multiply(%a, %a)",
+    "%m2 = f32[64,64] multiply(%a, %a)",
+    "ROOT %s1 = f32[64,64] add(%d0, %m2)",
+])
+
+
+def _stall_cycles(profile, cls):
+    return sum(r.stall_breakdown.get(cls, 0.0)
+               for r in profile.records.values())
+
+
+def _run(hlo, backend):
+    module = parse_hlo(hlo)
+    return VirtualSampler(module, backend.hw, sync=backend.sync).run()
+
+
+class TestIssueModel:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="queues"):
+            IssueModel(queues=0)
+        with pytest.raises(ValueError, match="width"):
+            IssueModel(width=0)
+        with pytest.raises(ValueError, match="policy"):
+            IssueModel(policy="lifo")
+
+    def test_ports_and_multi_stream(self):
+        assert SINGLE_ISSUE.ports == 1 and not SINGLE_ISSUE.multi_stream
+        assert IssueModel(queues=8, width=2).ports == 16
+
+    def test_with_issue_derives_renamed_backend(self):
+        base = get_backend("nvidia_gh200")
+        k1 = base.with_issue(SINGLE_ISSUE)
+        assert k1.name == "nvidia_gh200@q1x1-round_robin"
+        assert k1.hw.issue == SINGLE_ISSUE
+        assert k1.hw.clock_hz == base.hw.clock_hz
+        assert base.issue.queues == 4        # original untouched
+        # policy is part of the derived name: two variants differing only
+        # in scheduler policy must never alias in name-keyed caches
+        rr = base.with_issue(IssueModel(4, 1, "round_robin"))
+        go = base.with_issue(IssueModel(4, 1, "greedy_oldest"))
+        assert rr.name != go.name
+
+    def test_every_shipped_backend_declares_an_issue_model(self):
+        from repro.core import list_backends
+        policies = set()
+        for b in list_backends():
+            assert b.issue.queues >= 1
+            policies.add(b.issue.policy)
+        assert policies >= {"round_robin", "greedy_oldest"}
+
+
+class TestPortArbitration:
+    def test_concurrent_issue_shortens_makespan(self):
+        serial = _run(WIDE4, _variant(1))
+        wide = _run(WIDE4, _variant(4))
+        assert wide.makespan_cycles < serial.makespan_cycles
+
+    def test_single_stream_records_no_scheduler_stalls(self):
+        prof = _run(WIDE4, _variant(1))
+        assert _stall_cycles(prof, StallClass.NOT_SELECTED) == 0
+        assert _stall_cycles(prof, StallClass.PIPE_BUSY) == 0
+        assert prof.issue_pressure is not None
+        assert not prof.issue_pressure.contended
+
+    def test_same_pipe_contention_is_pipe_busy(self):
+        """4 VPU multiplies on 2 queues: the overflow pair waits behind
+        same-pipe occupants — `pipe_busy`, never `not_selected`."""
+        prof = _run(WIDE4, _variant(2))
+        assert _stall_cycles(prof, StallClass.PIPE_BUSY) > 0
+        assert _stall_cycles(prof, StallClass.NOT_SELECTED) == 0
+        ev = prof.issue_pressure.events
+        assert ev and all(e["stall_class"] == "pipe_busy" for e in ev)
+        assert all(e["holder"].startswith("main.1::m") for e in ev)
+
+    def test_cross_pipe_contention_is_not_selected(self):
+        """With round-robin assignment the second multiply lands behind
+        the slow dot: ready, but its queue is held by another pipe —
+        `not_selected` (arbitration loss)."""
+        prof = _run(MIXED3, _variant(2, policy="round_robin"))
+        assert _stall_cycles(prof, StallClass.NOT_SELECTED) > 0
+        blocked = [e for e in prof.issue_pressure.events
+                   if e["stall_class"] == "not_selected"]
+        assert blocked and blocked[0]["holder"] == "main.1::d0"
+        assert blocked[0]["pipe"] == "vpu"
+
+    def test_greedy_beats_round_robin_on_asymmetric_occupants(self):
+        """greedy_oldest is work-conserving: it issues behind the
+        earliest-freeing slot (the early-retiring copy, a different pipe
+        -> cheap `not_selected`), while static round-robin pins the
+        multiply behind its own queue's slow same-pipe occupant
+        (expensive `pipe_busy`)."""
+        asym = _hlo([
+            "%m0 = f32[64,64] multiply(%a, %a)",
+            "%cp1 = f32[64,64] copy(%a)",
+            "%m2 = f32[64,64] multiply(%a, %a)",
+            "ROOT %s1 = f32[64,64] add(%m2, %m0)",
+        ])
+        greedy = _run(asym, _variant(2, policy="greedy_oldest"))
+        rr = _run(asym, _variant(2, policy="round_robin"))
+        g_ns = _stall_cycles(greedy, StallClass.NOT_SELECTED)
+        g_pb = _stall_cycles(greedy, StallClass.PIPE_BUSY)
+        r_pb = _stall_cycles(rr, StallClass.PIPE_BUSY)
+        assert g_ns > 0 and g_pb == 0        # waited on the copy's slot
+        assert r_pb > 0                      # waited on the multiply
+        assert g_ns < r_pb                   # work conservation pays
+        g_ev = greedy.issue_pressure.events
+        assert g_ev[0]["holder"] == "main.1::cp1"
+        r_ev = rr.issue_pressure.events
+        assert r_ev[0]["holder"] == "main.1::m0"
+
+    def test_width_multiplies_ports(self):
+        """queues=1 x width=4 gives the same port count as queues=4 x
+        width=1 — the four independent multiplies all issue at t0."""
+        by_width = _run(WIDE4, _variant(1, width=4))
+        by_queues = _run(WIDE4, _variant(4))
+        assert by_width.makespan_cycles == by_queues.makespan_cycles
+
+    def test_dependent_chain_charges_data_stalls_not_contention(self):
+        chain = _hlo([
+            "%c0 = f32[64,64] multiply(%a, %a)",
+            "%c1 = f32[64,64] multiply(%c0, %c0)",
+            "ROOT %c2 = f32[64,64] multiply(%c1, %c1)",
+        ])
+        prof = _run(chain, _variant(4, policy="greedy_oldest"))
+        assert _stall_cycles(prof, StallClass.NOT_SELECTED) == 0
+        assert _stall_cycles(prof, StallClass.PIPE_BUSY) == 0
+        assert _stall_cycles(prof, StallClass.EXEC_DEP) > 0
+
+    def test_pipe_of_families(self):
+        module = parse_hlo(MIXED3)
+        by_name = {i.name: i for i in module.all_instructions()}
+        assert pipe_of(by_name["d0"]) == "mxu"
+        assert pipe_of(by_name["m1"]) == "vpu"
+
+
+class TestIssuePressureSurface:
+    @pytest.fixture(scope="class")
+    def analysis(self):
+        svc = LeoService()
+        backend = _variant(2, base="tpu_v5e")
+        an = svc.analyze(WIDE4, backend=backend)
+        diag = svc.diagnose(WIDE4, backend=backend)
+        return an, diag
+
+    def test_report_is_json_pure_and_sums_per_queue(self, analysis):
+        an, _ = analysis
+        report = an.issue_pressure
+        data = report.to_dict()
+        json.dumps(data)   # must not raise
+        assert data["queues"] == 2 and data["contended"]
+        assert data["contention_cycles"] == pytest.approx(
+            sum(q["not_selected_cycles"] + q["pipe_busy_cycles"]
+                for q in data["per_queue"]))
+        assert sum(q["issued"] for q in data["per_queue"]) > 0
+
+    def test_blame_channel_sorted_and_populated(self, analysis):
+        an, _ = analysis
+        sched = an.blame.scheduler_contention
+        assert sched
+        assert all(s.stall_class in ("pipe_busy", "not_selected")
+                   for s in sched)
+        assert [s.cycles for s in sched] == \
+            sorted((s.cycles for s in sched), reverse=True)
+        assert all(0 <= s.queue < 2 for s in sched)
+
+    def test_diagnosis_section_round_trips(self, analysis):
+        from repro.core import Diagnosis
+        _, diag = analysis
+        ip = diag.issue_pressure
+        assert ip["recorded"] and ip["contended"]
+        assert ip["blame"]
+        assert Diagnosis.from_json(diag.to_json()) == diag
+
+    def test_issue_variants_do_not_alias_in_service_caches(self):
+        """The K=1 and native variants of one backend must produce
+        distinct cached diagnoses (the derived name keys the cache)."""
+        svc = LeoService()
+        native = svc.diagnose(WIDE4, backend=_variant(2))
+        single = svc.diagnose(WIDE4, backend=_variant(1))
+        assert native.estimated_step_seconds < \
+            single.estimated_step_seconds
+        assert single.issue_pressure["queues"] == 1
+
+    def test_while_loop_warmup_does_not_pollute_pressure(self):
+        """The while warm-up pass runs on a scratch collector: contention
+        is charged once per steady-state iteration set, not once extra."""
+        loop_hlo = """\
+HloModule loop_issue
+
+%body.1 (p.1: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p.1 = (s32[], f32[64,64]) parameter(0)
+  %iv = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %iv2 = s32[] add(%iv, %one)
+  %acc = f32[64,64] get-tuple-element(%p.1), index=1
+  %w0 = f32[64,64] multiply(%acc, %acc)
+  %w1 = f32[64,64] multiply(%acc, %acc)
+  %w2 = f32[64,64] multiply(%acc, %acc)
+  %gain = f32[64,64] add(%w0, %w1)
+  %gain2 = f32[64,64] add(%gain, %w2)
+  ROOT %out = (s32[], f32[64,64]) tuple(%iv2, %gain2)
+}
+
+%cond.1 (p.2: (s32[], f32[64,64])) -> pred[] {
+  %p.2 = (s32[], f32[64,64]) parameter(0)
+  %iv3 = s32[] get-tuple-element(%p.2), index=0
+  %lim = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv3, %lim), direction=LT
+}
+
+ENTRY %main.1 (arg0: f32[64,64]) -> f32[64,64] {
+  %arg0 = f32[64,64] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64,64]) tuple(%zero, %arg0)
+  %loop = (s32[], f32[64,64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %result = f32[64,64] get-tuple-element(%loop), index=1
+}
+"""
+        prof = _run(loop_hlo, _variant(2))
+        report = prof.issue_pressure
+        # 3 independent multiplies on 2 queues contend in the body; the
+        # recorded cycles carry the steady-state weight (trip count), and
+        # the body's weighted contention equals the report's total — no
+        # extra unweighted warm-up contribution.
+        trips = 5
+        per_event = {}
+        for e in report.events:
+            per_event.setdefault(e["consumer"], 0.0)
+            per_event[e["consumer"]] += e["stall_cycles"] * e["weight"]
+        assert per_event, "expected loop-body contention"
+        for consumer, cycles in per_event.items():
+            rec_cycles = sum(
+                prof.records[consumer].stall_breakdown.get(c, 0.0)
+                for c in (StallClass.NOT_SELECTED, StallClass.PIPE_BUSY))
+            assert rec_cycles == pytest.approx(cycles), consumer
+        assert all(e["weight"] == trips for e in report.events)
+        # control wrappers (the while op) record an issue event but no
+        # busy cycles — their bodies' instructions already charge their
+        # queues, so per-queue occupancy can never exceed the makespan
+        for q in report.per_queue:
+            assert q["busy_cycles"] <= prof.makespan_cycles, q

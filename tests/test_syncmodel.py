@@ -1,11 +1,14 @@
 """Tests for the first-class SyncModel API (§III-E finite sync resources).
 
 Covers the scoreboard's allocation semantics (capacity, oldest-eviction
-serialization, counter-style re-arm), the SyncSemantics deprecation shim's
-parity, behavioral resource exhaustion end-to-end (the acceptance
-criterion: the same copy storm stalls NVIDIA-class parts and sails through
-Intel-class parts, with the consumed instance named in the Diagnosis), the
-sync-edge resource annotation, and the schema-v2 migration path.
+serialization, counter-style re-arm, per-queue replicas under a
+multi-queue issue model), the SyncSemantics deprecation shim's parity,
+behavioral resource exhaustion end-to-end on the single-stream lane (the
+PR-3 acceptance criterion: the same copy storm stalls NVIDIA-class parts
+and sails through Intel-class parts, with the consumed instance named in
+the Diagnosis), pool-scope behavior at native queue counts (CTA-shared
+barriers still contend, per-wave counters spread the storm), the
+sync-edge resource annotation, and the v1/v2 -> v3 schema migrations.
 """
 import json
 
@@ -17,6 +20,7 @@ from repro.core import (
     LeoService,
     MIN_SCHEMA_VERSION,
     SCHEMA_VERSION,
+    SINGLE_ISSUE,
     StallClass,
     SyncKind,
     SyncModel,
@@ -28,6 +32,12 @@ from repro.core import (
     list_backends,
 )
 from repro.core.backends import Backend, GENERIC_TAXONOMY
+
+
+def _single(name: str) -> Backend:
+    """Single-stream (K=1) variant of a registered backend: the lane the
+    PR-3 §III-E exhaustion semantics were pinned on."""
+    return get_backend(name).with_issue(SINGLE_ISSUE, name=f"{name}@ss")
 
 
 def _two_slot_model() -> SyncModel:
@@ -130,10 +140,11 @@ class TestScoreboard:
 
 class TestScoreboardProperty:
     def test_capacity_invariant_and_roundtrip_all_backends(self):
-        """ISSUE satellite: for every registered backend, any acquire
-        sequence keeps every pool within capacity, and retiring everything
-        acquired drains the scoreboard to empty."""
-        hypothesis = pytest.importorskip(
+        """For every registered backend at its NATIVE queue count, any
+        acquire sequence (random kinds, tags, issuing queues) keeps every
+        per-queue board within its pool capacity, and retiring everything
+        acquired drains the scoreboard to empty (ISSUE satellite)."""
+        pytest.importorskip(
             "hypothesis",
             reason="property tests need hypothesis (requirements-dev.txt)")
         from hypothesis import given, settings, strategies as st
@@ -143,26 +154,74 @@ class TestScoreboardProperty:
 
         ops = st.lists(
             st.tuples(st.sampled_from(list(SyncKind)),
-                      st.integers(0, 40)),       # tag ids
+                      st.integers(0, 40),        # tag ids
+                      st.integers(0, 15)),       # issuing queue (mod K)
             min_size=1, max_size=80)
 
         @settings(max_examples=60, deadline=None)
         @given(st.integers(0, len(backends) - 1), ops)
         def check(bidx, sequence):
             backend = backends[bidx]
-            sb = backend.sync.scoreboard()
+            queues = backend.issue.queues
+            sb = backend.sync.scoreboard(queues=queues)
             capacities = {p.name: p.capacity for p in backend.sync.pools}
             acquired = set()
-            for t, (kind, tag) in enumerate(sequence):
-                sb.acquire(kind, f"t{tag}", consumer=f"i{t}", now=float(t))
+            for t, (kind, tag, queue) in enumerate(sequence):
+                sb.acquire(kind, f"t{tag}", consumer=f"i{t}", now=float(t),
+                           queue=queue % queues)
                 acquired.add((kind, f"t{tag}"))
                 for pool_name, cap in capacities.items():
-                    board = sb._boards[pool_name]
-                    assert board.in_flight <= cap
+                    for board in sb._boards[pool_name]:
+                        assert board.in_flight <= cap
             for kind, tag in acquired:
                 while sb.retire(kind, tag):
                     pass
             assert sb.total_in_flight == 0
+
+        check()
+
+    def test_k1_multiqueue_degenerates_to_plain_scoreboard(self):
+        """ISSUE satellite (parity anchor at the scoreboard level): for
+        any acquire/retire sequence, a multi-queue scoreboard receiving
+        everything on queue 0 behaves identically — same serialization
+        stalls, same instance assignment modulo the ``q0:`` prefix — to a
+        ``queues=1`` scoreboard of the same model."""
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (requirements-dev.txt)")
+        from hypothesis import given, settings, strategies as st
+
+        model = SyncModel(
+            pools=(SyncResourcePool(
+                name="ctr", kind=SyncKind.WAITCNT, label="two counters",
+                instances=("c0", "c1"), scope="queue"),),
+            routing={k: "ctr" for k in SyncKind})
+
+        ops = st.lists(
+            st.tuples(st.booleans(),           # acquire vs retire
+                      st.integers(0, 6)),      # tag id
+            min_size=1, max_size=60)
+
+        @settings(max_examples=80, deadline=None)
+        @given(ops)
+        def check(sequence):
+            plain = model.scoreboard(realloc_cycles=3.0, queues=1)
+            multi = model.scoreboard(realloc_cycles=3.0, queues=4)
+            for t, (is_acquire, tag) in enumerate(sequence):
+                if is_acquire:
+                    a = plain.acquire(SyncKind.WAITCNT, f"t{tag}",
+                                      consumer=f"i{t}", now=float(t))
+                    b = multi.acquire(SyncKind.WAITCNT, f"t{tag}",
+                                      consumer=f"i{t}", now=float(t),
+                                      queue=0)
+                    assert (a.stall_cycles, a.available_at,
+                            a.evicted_holder) == \
+                        (b.stall_cycles, b.available_at, b.evicted_holder)
+                    assert b.instance == f"q0:{a.instance}"
+                else:
+                    assert plain.retire(SyncKind.WAITCNT, f"t{tag}") == \
+                        multi.retire(SyncKind.WAITCNT, f"t{tag}")
+            assert plain.total_in_flight == multi.total_in_flight
 
         check()
 
@@ -231,10 +290,17 @@ class TestSyncSemanticsShim:
 class TestResourceExhaustion:
     @pytest.fixture(scope="class")
     def per_backend(self):
+        """Single-stream (K=1) lane: the §III-E exhaustion semantics below
+        were pinned on the serialized issue model and must keep holding
+        there verbatim; native-issue behavior (per-queue pools spreading
+        the storm) is covered by TestPerQueueScoreboards."""
         from conftest import COPYSTORM_HLO
         svc = LeoService()
-        return {name: (an, svc.diagnose(COPYSTORM_HLO, backend=name))
-                for name, an in svc.compare_backends(COPYSTORM_HLO).items()}
+        singles = [_single(b.name) for b in list_backends()]
+        return {s.name.split("@", 1)[0]:
+                (svc.analyze(COPYSTORM_HLO, backend=s),
+                 svc.diagnose(COPYSTORM_HLO, backend=s))
+                for s in singles}
 
     def test_nvidia_exhausts_barrier_slots_intel_does_not(self, per_backend):
         """8 in-flight async copies > 6 NVIDIA barrier slots but < 16 Intel
@@ -336,30 +402,168 @@ ENTRY %main.1 (arg0: f32[64,64]) -> f32[64,64] {
 
 
 # --------------------------------------------------------------------------
-# Schema v2 migration (ISSUE satellite).
+# Per-queue scoreboards under native issue models (PR-4 tentpole).
+# --------------------------------------------------------------------------
+
+class TestPerQueueScoreboards:
+    """Native-issue behavior: pool *scope* decides whether multi-queue
+    issue relieves §III-E pressure.  NVIDIA's device-scoped (CTA-shared)
+    barriers contend regardless of queue count; AMD's per-wave counters
+    replicate per queue, so the 8-copy storm spreads — but a 12-copy
+    storm (3 per queue > 2 counters) contends on EVERY queue."""
+
+    def test_device_scoped_barriers_still_contend_at_native_k(self):
+        from conftest import COPYSTORM_HLO
+        diag = LeoService().diagnose(COPYSTORM_HLO, backend="nvidia_gh200")
+        sr = diag.sync_resources
+        assert sr["contended"]
+        pool = next(p for p in sr["pools"] if p["pool"] == "named_barrier")
+        assert pool["scope"] == "device" and pool["queues"] == 1
+        assert pool["peak_in_flight"] == pool["capacity"] == 6
+        # device-scoped instances keep their plain names (no queue prefix)
+        assert all(b["resource"].startswith("B") for b in sr["blame"])
+
+    def test_per_wave_counters_spread_the_storm_at_native_k(self):
+        from conftest import COPYSTORM_HLO
+        diag = LeoService().diagnose(COPYSTORM_HLO, backend="amd_mi300a")
+        pool = next(p for p in diag.sync_resources["pools"]
+                    if p["pool"] == "waitcnt_counter")
+        assert pool["scope"] == "queue" and pool["queues"] == 4
+        # 8 copies round-robin over 4 queues = 2 per queue = exactly the
+        # per-wave counter capacity: no oversubscription anywhere
+        assert not diag.sync_resources["contended"]
+        assert all(q["evictions"] == 0 for q in pool["per_queue"])
+
+    def test_overdriven_per_queue_pool_contends_on_every_queue(self):
+        from repro.launch.analysis_server import copy_storm_hlo
+        diag = LeoService().diagnose(copy_storm_hlo(12),
+                                     backend="amd_mi300a")
+        sr = diag.sync_resources
+        pool = next(p for p in sr["pools"]
+                    if p["pool"] == "waitcnt_counter")
+        assert sr["contended"]
+        assert len(pool["per_queue"]) == 4
+        for q in pool["per_queue"]:
+            assert q["evictions"] >= 1, q
+            assert q["peak_in_flight"] <= pool["capacity"]
+        # blame names queue-qualified instances ("q2:vmcnt")
+        assert sr["blame"]
+        for b in sr["blame"]:
+            assert b["resource"] in pool["instances"]
+            assert b["resource"].split(":")[0].startswith("q")
+
+    def test_fusion_body_edges_share_the_report_namespace(self):
+        """Computations only the static replay reaches (fusion bodies —
+        the sampler never schedules them) must still get instance
+        annotations that exist in the multi-queue pressure report's
+        namespace (`q0:vmcnt`), not the bare single-queue names."""
+        hlo = """\
+HloModule fusion_sync
+
+%fused_computation (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64] parameter(0)
+  %cps = (f32[64,64], f32[64,64], u32[]) copy-start(%p0)
+  ROOT %cpd = f32[64,64] copy-done(%cps)
+}
+
+ENTRY %main.1 (arg0: f32[64,64]) -> f32[64,64] {
+  %arg0 = f32[64,64] parameter(0)
+  ROOT %fus = f32[64,64] fusion(%arg0), kind=kLoop, calls=%fused_computation
+}
+"""
+        an = LeoService().analyze(hlo, backend="amd_mi300a")
+        edges = [e for e in an.graph.edges
+                 if e.kind.is_sync and e.resource is not None]
+        assert edges, "fusion-body sync edges lost their annotation"
+        pool = an.sync_pressure.pool("waitcnt_counter")
+        for e in edges:
+            assert e.resource in pool["instances"], e.resource
+            assert e.resource.startswith("q0:")
+        assert sum(pool["edges_per_instance"].values()) == len(edges)
+
+    def test_measured_profile_fallback_shares_the_report_namespace(self):
+        """With a measured StallProfile (no sampler pressure/assignment),
+        the static-only pressure report must still be minted at the
+        backend's queue count so edges_per_instance matches the
+        q-prefixed edge annotations."""
+        from conftest import COPYSTORM_HLO
+        from repro.core import parse_hlo
+        from repro.core.passes import default_pipeline
+        from repro.core.sampler import VirtualSampler
+        backend = get_backend("amd_mi300a")
+        module = parse_hlo(COPYSTORM_HLO)
+        prof = VirtualSampler(module, backend.hw, sync=backend.sync).run()
+        prof.sync_pressure = None          # what a measured profile lacks
+        prof.sync_assignment = None
+        prof.issue_pressure = None
+        ctx = default_pipeline().run(module, backend, profile=prof)
+        pool = ctx.sync_pressure.pool("waitcnt_counter")
+        assert pool["queues"] == 4
+        assert pool["edges_per_instance"]
+        assert all(i.startswith("q") for i in pool["edges_per_instance"])
+
+    def test_counter_rearm_lands_on_the_holding_queue(self):
+        """A live tag re-armed from another queue is a counter increment
+        on the replica that holds it, not a fresh allocation elsewhere."""
+        model = SyncModel(
+            pools=(SyncResourcePool(
+                name="ctr", kind=SyncKind.WAITCNT, label="one counter",
+                instances=("c0",), scope="queue"),),
+            routing={k: "ctr" for k in SyncKind})
+        sb = model.scoreboard(queues=2)
+        a = sb.acquire(SyncKind.WAITCNT, "sem", consumer="i0", now=0.0,
+                       queue=0)
+        b = sb.acquire(SyncKind.WAITCNT, "sem", consumer="i1", now=1.0,
+                       queue=1)
+        assert a.instance == b.instance == "q0:c0"
+        assert sb.in_flight(SyncKind.WAITCNT, queue=0) == 1
+        assert sb.in_flight(SyncKind.WAITCNT, queue=1) == 0
+        assert sb.retire(SyncKind.WAITCNT, "sem")
+        assert sb.retire(SyncKind.WAITCNT, "sem")
+        assert sb.total_in_flight == 0
+
+
+# --------------------------------------------------------------------------
+# Schema v1/v2 -> v3 migration (PR-3/PR-4 satellites).
 # --------------------------------------------------------------------------
 
 class TestSchemaMigration:
-    def _v1_payload(self, async_hlo_text) -> dict:
+    def _payload(self, async_hlo_text, version: int) -> dict:
         an = analyze_hlo(async_hlo_text, hw="tpu_v5e",
                          hints={"total_devices": 8})
         data = Diagnosis.from_analysis(an).to_dict()
-        del data["sync_resources"]
-        data["schema_version"] = 1
+        del data["issue_pressure"]          # pre-v3
+        if version < 2:
+            del data["sync_resources"]      # pre-v2
+        data["schema_version"] = version
         return data
 
-    def test_v1_payload_migrates_with_not_recorded_default(self,
-                                                           async_hlo_text):
-        assert SCHEMA_VERSION == 2 and MIN_SCHEMA_VERSION == 1
-        diag = Diagnosis.from_dict(self._v1_payload(async_hlo_text))
+    def test_v1_payload_migrates_with_not_recorded_defaults(self,
+                                                            async_hlo_text):
+        assert SCHEMA_VERSION == 3 and MIN_SCHEMA_VERSION == 1
+        diag = Diagnosis.from_dict(self._payload(async_hlo_text, 1))
         assert diag.schema_version == SCHEMA_VERSION
         assert diag.sync_resources["recorded"] is False
         assert "not recorded" in diag.sync_resources["note"]
-        # migrated payloads re-serialize as v2 and round-trip exactly
+        assert diag.issue_pressure["recorded"] is False
+        assert "not recorded" in diag.issue_pressure["note"]
+        # migrated payloads re-serialize as v3 and round-trip exactly
+        assert Diagnosis.from_json(diag.to_json()) == diag
+
+    def test_v2_payload_keeps_sync_resources_and_defaults_issue(
+            self, async_hlo_text):
+        """ISSUE acceptance: Diagnosis v2 payloads load through the v3
+        migration — their recorded sync_resources survive, only the new
+        issue_pressure section gets the explicit default."""
+        diag = Diagnosis.from_dict(self._payload(async_hlo_text, 2))
+        assert diag.schema_version == SCHEMA_VERSION
+        assert diag.sync_resources["recorded"] is True
+        assert diag.sync_resources["pools"]
+        assert diag.issue_pressure["recorded"] is False
         assert Diagnosis.from_json(diag.to_json()) == diag
 
     def test_newer_schema_still_rejected(self, async_hlo_text):
-        data = self._v1_payload(async_hlo_text)
+        data = self._payload(async_hlo_text, 1)
         data["schema_version"] = SCHEMA_VERSION + 1
         with pytest.raises(ValueError, match="schema_version"):
             Diagnosis.from_dict(data)
@@ -367,8 +571,9 @@ class TestSchemaMigration:
         with pytest.raises(ValueError, match="schema_version"):
             Diagnosis.from_dict(data)
 
-    def test_service_serves_migrated_v1_artifact_without_pipeline(
-            self, async_hlo_text, tmp_path):
+    @pytest.mark.parametrize("version", [1, 2])
+    def test_service_serves_migrated_artifact_without_pipeline(
+            self, async_hlo_text, tmp_path, version):
         """The diagnosis disk key deliberately excludes SCHEMA_VERSION, so
         a schema-only bump keeps hitting pre-bump artifacts and migrates
         them instead of re-running the pipeline."""
@@ -381,11 +586,11 @@ class TestSchemaMigration:
         import os
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with gzip.open(path, "wt", encoding="utf-8") as f:
-            json.dump(self._v1_payload(async_hlo_text), f)
+            json.dump(self._payload(async_hlo_text, version), f)
         diag = svc.diagnose(async_hlo_text, hints={"total_devices": 8})
         assert svc.stats.analyze_calls == 0       # served from disk
         assert diag.schema_version == SCHEMA_VERSION
-        assert diag.sync_resources["recorded"] is False
+        assert diag.issue_pressure["recorded"] is False
 
     def test_warm_disk_cache_with_v1_artifact_still_answers(
             self, async_hlo_text, tmp_path):
@@ -394,13 +599,14 @@ class TestSchemaMigration:
         import gzip
         cache = DiskCache(str(tmp_path))
         cache.store_diagnosis(
-            "k1", Diagnosis.from_dict(self._v1_payload(async_hlo_text)))
+            "k1", Diagnosis.from_dict(self._payload(async_hlo_text, 1)))
         # rewrite the artifact as a genuine v1 payload
         path = cache._path("diagnoses", "k1", ".json.gz")
-        data = self._v1_payload(async_hlo_text)
+        data = self._payload(async_hlo_text, 1)
         with gzip.open(path, "wt", encoding="utf-8") as f:
             json.dump(data, f)
         diag = cache.load_diagnosis("k1")
         assert diag is not None
         assert diag.sync_resources["recorded"] is False
+        assert diag.issue_pressure["recorded"] is False
         assert cache.stats.diagnosis_hits == 1
