@@ -16,16 +16,22 @@
 #                       cross-vendor blame divergence and the wide-ops
 #                       issue-contention divergence)
 #   make bench-smoke  — the perf-trajectory lane: trimmed deterministic
-#                       benchmark subset; emits BENCH_pr4.json and fails
+#                       benchmark subset; emits BENCH_pr6.json and fails
 #                       on >10% geomean-step-time regression vs the
 #                       committed benchmarks/baseline.json
+#   make net-smoke    — the networked-serving lane: start `--serve` on an
+#                       ephemeral port with a 1-slot/1-deep queue, run the
+#                       client demo against it (which must observe a 429
+#                       shed and retry through it), grep /metrics for
+#                       served traffic, then SIGTERM and gate on a clean
+#                       drain
 
 PY := python
 PYTEST_FLAGS := -x -q
 
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 quick bench serve-smoke sync-smoke bench-smoke
+.PHONY: tier1 quick bench serve-smoke sync-smoke bench-smoke net-smoke
 
 tier1:
 	$(PY) -m pytest $(PYTEST_FLAGS)
@@ -37,7 +43,7 @@ bench:
 	$(PY) -m benchmarks.run
 
 bench-smoke:
-	$(PY) -m benchmarks.bench_smoke --output BENCH_pr4.json
+	$(PY) -m benchmarks.bench_smoke --out BENCH_pr6.json
 
 sync-smoke:
 	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_syncmodel.py \
@@ -56,3 +62,28 @@ serve-smoke:
 	$(PY) -m repro.launch.analysis_server --smoke --requests 8 --slots 3 \
 		--backends all --cache-dir $$CACHE; \
 	status=$$?; rm -rf $$CACHE; exit $$status
+
+# Server under a deliberately tiny admission config (1 slot, 1-deep
+# queue) so the demo's burst MUST shed; the demo exits nonzero if no 429
+# was observed, the grep gates on /metrics reporting served traffic, and
+# `wait` after SIGTERM gates on the drain path exiting 0.
+net-smoke:
+	WORK=$$(mktemp -d); \
+	$(PY) -m repro.launch.analysis_server --serve 0 --slots 1 \
+		--max-queue 1 --cache-dir $$WORK/cache \
+		--port-file $$WORK/port & \
+	SRV=$$!; \
+	for i in $$(seq 1 150); do [ -s $$WORK/port ] && break; \
+		sleep 0.1; done; \
+	if [ ! -s $$WORK/port ]; then echo "server never bound"; \
+		kill $$SRV 2>/dev/null; rm -rf $$WORK; exit 1; fi; \
+	$(PY) examples/analysis_client_demo.py --port $$(cat $$WORK/port) \
+		--expect-shed --metrics-out $$WORK/metrics.prom; \
+	status=$$?; \
+	if [ $$status -eq 0 ]; then \
+		grep -Eq 'leo_requests_total\{[^}]*\} [1-9]' $$WORK/metrics.prom \
+		|| { echo "no served traffic in /metrics"; status=1; }; \
+	fi; \
+	kill -TERM $$SRV; \
+	wait $$SRV || { echo "server did not drain cleanly"; status=1; }; \
+	rm -rf $$WORK; exit $$status

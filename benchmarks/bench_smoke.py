@@ -30,7 +30,7 @@ import time
 from typing import Dict, List
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
-DEFAULT_OUTPUT = "BENCH_pr4.json"
+DEFAULT_OUTPUT = "BENCH.json"
 DEFAULT_THRESHOLD = 0.10
 
 
@@ -142,8 +142,10 @@ def compare(result: Dict[str, object], baseline: Dict[str, object],
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--output", default=DEFAULT_OUTPUT,
-                    help="result JSON path (uploaded as a CI artifact)")
+    ap.add_argument("--out", "--output", dest="output",
+                    default=DEFAULT_OUTPUT,
+                    help="result JSON path (uploaded as a CI artifact); "
+                         "--output kept as an alias for older lanes")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="committed baseline JSON to gate against")
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,

@@ -308,6 +308,12 @@ class DiskCache:
             self._sweep_lock.release()
         return {"evicted": evicted, "bytes_freed": freed}
 
+    def flush(self) -> Dict[str, int]:
+        """Final blocking sweep — the graceful-drain hook.  Waits for any
+        in-progress opportunistic sweep, then enforces TTL + size bounds
+        so a terminating server leaves the on-disk tier within budget."""
+        return self.sweep(blocking=True)
+
     def clear(self) -> None:
         import shutil
         for kind in ("modules", "diagnoses"):

@@ -30,6 +30,7 @@ from __future__ import annotations
 import hashlib
 import json
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
@@ -142,7 +143,8 @@ class LeoService:
                  cache_dir: Optional[str] = None,
                  disk_cache_max_bytes: Optional[int] = None,
                  disk_cache_ttl_seconds: Optional[float] = None,
-                 max_workers: int = 8):
+                 max_workers: int = 8,
+                 metrics: Optional[Any] = None):
         # disk_cache_max_bytes / _ttl_seconds bound the on-disk tier (size
         # cap enforced oldest-accessed-first, idle TTL); None keeps the
         # legacy unbounded behavior.
@@ -162,6 +164,41 @@ class LeoService:
         self._pool: Optional[ThreadPoolExecutor] = None
         self.diagnosis_hits = 0
         self.diagnosis_misses = 0
+        # optional repro.serve.metrics.MetricsRegistry (typed Any: the
+        # core layer must not import the serving layer).  None keeps the
+        # hot path allocation- and branch-cheap.
+        self.metrics = metrics
+        self._m_diagnoses = self._m_cache = None
+        self._m_parse = self._m_pipeline = None
+        if metrics is not None:
+            self._m_diagnoses = metrics.counter(
+                "leo_diagnoses_total",
+                "Diagnoses served (cache hits included), per backend.",
+                labelnames=("backend",))
+            self._m_cache = metrics.counter(
+                "leo_cache_requests_total",
+                "Diagnosis cache lookups per tier and outcome.",
+                labelnames=("tier", "result"))
+            self._m_parse = metrics.histogram(
+                "leo_parse_seconds",
+                "HLO parse latency (session cache hits land sub-ms).")
+            self._m_pipeline = metrics.histogram(
+                "leo_pipeline_seconds",
+                "Full analysis pipeline latency on diagnosis misses.")
+            g = metrics.gauge(
+                "leo_session_cache_hits",
+                "Session single-flight cache hit counters, per op.",
+                labelnames=("op",))
+            g.set_function(lambda: float(self.session.stats.parse_hits),
+                           op="parse")
+            g.set_function(lambda: float(self.session.stats.analyze_hits),
+                           op="analyze")
+            if self.disk_cache is not None:
+                db = metrics.gauge(
+                    "leo_disk_cache_bytes",
+                    "Bytes currently held by the on-disk cache tier.")
+                db.set_function(
+                    lambda: float(self.disk_cache.total_bytes()))
 
     # -- plumbing --------------------------------------------------------------
 
@@ -197,6 +234,14 @@ class LeoService:
         if pool is not None:
             pool.shutdown(wait=True)
 
+    def flush(self) -> Dict[str, int]:
+        """Flush the on-disk tier (final blocking sweep) — called by the
+        serving front-end on graceful drain.  No-op without a
+        ``cache_dir``."""
+        if self.disk_cache is not None:
+            return self.disk_cache.flush()
+        return {"evicted": 0, "bytes_freed": 0}
+
     def __enter__(self) -> "LeoService":
         return self
 
@@ -217,7 +262,12 @@ class LeoService:
     # -- raw-analysis surface (LeoAnalysis out) --------------------------------
 
     def parse(self, hlo_text: str, hints: Optional[dict] = None) -> Module:
-        return self.session.parse(hlo_text, hints=hints)
+        if self._m_parse is None:
+            return self.session.parse(hlo_text, hints=hints)
+        t0 = time.monotonic()
+        module = self.session.parse(hlo_text, hints=hints)
+        self._m_parse.observe(time.monotonic() - t0)
+        return module
 
     def analyze(self, program: ModuleLike, **kwargs: Any) -> LeoAnalysis:
         return self.session.analyze(program, **kwargs)
@@ -300,26 +350,48 @@ class LeoService:
                 cached = self._diagnoses.get(dkey)
                 if cached is not None:
                     self.diagnosis_hits += 1
+            if self._m_cache is not None:
+                self._m_cache.inc(tier="diagnosis_memory",
+                                  result="hit" if cached is not None
+                                  else "miss")
             if cached is not None:
+                if self._m_diagnoses is not None:
+                    self._m_diagnoses.inc(backend=b.name)
                 return cached.copy()
             if self.disk_cache is not None:
                 diag = self.disk_cache.load_diagnosis(dkey)
+                if self._m_cache is not None:
+                    self._m_cache.inc(tier="diagnosis_disk",
+                                      result="hit" if diag is not None
+                                      else "miss")
                 if diag is not None:
                     with self._lock:
                         self.diagnosis_hits += 1
                         self._diagnoses[dkey] = diag
+                    if self._m_diagnoses is not None:
+                        self._m_diagnoses.inc(backend=b.name)
                     return diag.copy()
         with self._lock:
             self.diagnosis_misses += 1
+        if self._m_parse is not None and isinstance(program, str):
+            # warm the session parse tier through the timed parse() so
+            # the parse histogram sees serving-path data; analyze() below
+            # still keys its caches by content, not Module identity
+            self.parse(program, hints=hints)
+        t0 = time.monotonic()
         analysis = self.session.analyze(
             program, backend=b, hints=hints, n_chains=n_chains,
             prune_unexecuted=prune_unexecuted)
+        if self._m_pipeline is not None:
+            self._m_pipeline.observe(time.monotonic() - t0)
         diag = Diagnosis.from_analysis(analysis, max_chains=n_chains)
         if dkey is not None:
             with self._lock:
                 self._diagnoses[dkey] = diag.copy()
             if self.disk_cache is not None:
                 self.disk_cache.store_diagnosis(dkey, diag)
+        if self._m_diagnoses is not None:
+            self._m_diagnoses.inc(backend=b.name)
         return diag
 
     def submit(self, request: AnalyzeRequest

@@ -10,6 +10,16 @@ caches mean N queued requests for the same trace cost one parse and one
 pipeline run, and a warm ``--cache-dir`` serves repeat traffic from disk
 without parsing at all.
 
+The engine is thread-safe and is the execution half of the networked
+front-end in :mod:`repro.serve`: ``--serve PORT`` wraps it in the HTTP
+server (bounded admission with 429 shed, per-request deadlines,
+``/metrics``, graceful SIGTERM drain — see ``docs/serving.md``).
+``max_queue`` bounds admission (:class:`QueueFull` when exceeded), each
+queued request may carry an absolute deadline (overdue entries are
+cancelled in the queue or abandoned in flight), and every result records
+``queue_seconds`` (submit→admit) and ``service_seconds`` (admit→done)
+separately.
+
 Usage (smoke: built-in demo traces, 3 slots):
 
   PYTHONPATH=src python -m repro.launch.analysis_server --smoke
@@ -17,11 +27,15 @@ Usage (smoke: built-in demo traces, 3 slots):
   PYTHONPATH=src python -m repro.launch.analysis_server \\
       --hlo experiments/dryrun/qwen2__train_4k__single.hlo.gz \\
       --backends tpu_v5e,nvidia_gh200,amd_mi300a --cache-dir .leo_cache
+
+  PYTHONPATH=src python -m repro.launch.analysis_server \\
+      --serve 8321 --slots 4 --max-queue 16 --cache-dir .leo_cache
 """
 from __future__ import annotations
 
 import argparse
 import gzip
+import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass
@@ -30,9 +44,33 @@ from typing import Dict, List, Optional
 from ..core import AnalyzeRequest, Diagnosis, LeoService
 
 
+class QueueFull(RuntimeError):
+    """Admission rejected: the bounded queue is at capacity.  The HTTP
+    front-end maps this to 429 + ``Retry-After``."""
+
+    def __init__(self, depth: int, limit: int):
+        super().__init__(f"admission queue full ({depth}/{limit})")
+        self.depth = depth
+        self.limit = limit
+
+
+class ServerDraining(RuntimeError):
+    """Admission rejected: the server is draining (SIGTERM received);
+    in-flight work finishes, new work goes elsewhere (HTTP 503)."""
+
+
+@dataclass
+class _Pending:
+    """A queued request plus its transport envelope: when it arrived and
+    when (monotonic clock) it stops being worth serving."""
+    request: AnalyzeRequest
+    submitted_at: float = 0.0
+    deadline: Optional[float] = None       # absolute time.monotonic()
+
+
 @dataclass
 class _Slot:
-    request: Optional[AnalyzeRequest] = None
+    pending: Optional[_Pending] = None
     future: Optional[Future] = None
     admitted_at: float = 0.0
 
@@ -43,7 +81,11 @@ class ServerResult:
     diagnosis: Optional[Diagnosis] = None      # single-backend requests
     fanout: Optional[Dict[str, Diagnosis]] = None  # multi-backend requests
     error: Optional[str] = None
+    #: total submit→done wall time (= queue_seconds + service_seconds);
+    #: kept for callers of the pre-split field
     seconds: float = 0.0
+    queue_seconds: float = 0.0             # submit → admit (queue wait)
+    service_seconds: float = 0.0           # admit → done (actual service)
 
 
 class AnalysisServer:
@@ -54,45 +96,114 @@ class AnalysisServer:
     until drained.  Slots bound the number of in-flight analyses
     independently of queue depth — the admission-control half of a
     serving deployment, with the service pool as the execution half.
+
+    Thread-safe: the HTTP front-end submits from N handler threads and
+    waits per-request on :meth:`wait` while a background ticker (see
+    :meth:`start_ticker`) drives admissions/harvests; the single-threaded
+    ``submit``/``run`` smoke path is unchanged.
     """
 
     def __init__(self, service: Optional[LeoService] = None,
-                 slots: int = 4):
+                 slots: int = 4, max_queue: Optional[int] = None):
         self.service = service or LeoService(max_workers=max(slots, 2))
         self.slots = [_Slot() for _ in range(slots)]
-        self.queue: List[AnalyzeRequest] = []
+        self.max_queue = max_queue
+        self.queue: List[_Pending] = []
         self.results: Dict[str, ServerResult] = {}
         self._auto_rid = 0
+        self._lock = threading.RLock()
+        self._done = threading.Condition(self._lock)
+        self._draining = False
+        self._abandoned: set = set()
+        self._ticker: Optional[threading.Thread] = None
+        self._ticker_stop = threading.Event()
 
-    def submit(self, request: AnalyzeRequest) -> str:
+    def submit(self, request: AnalyzeRequest,
+               deadline_seconds: Optional[float] = None) -> str:
+        """Enqueue one request.  Raises :class:`QueueFull` when the
+        bounded queue is at capacity and :class:`ServerDraining` after
+        :meth:`begin_drain` — admission control, not silent buffering."""
         request.validate()
-        if request.request_id is None:
-            request.request_id = f"req-{self._auto_rid}"
-            self._auto_rid += 1
-        self.queue.append(request)
-        return request.request_id
+        now = time.monotonic()
+        with self._lock:
+            if self._draining:
+                raise ServerDraining("server is draining; not admitting")
+            if self.max_queue is not None and \
+                    len(self.queue) >= self.max_queue:
+                raise QueueFull(len(self.queue), self.max_queue)
+            if request.request_id is None:
+                request.request_id = f"req-{self._auto_rid}"
+                self._auto_rid += 1
+            self.queue.append(_Pending(
+                request=request, submitted_at=now,
+                deadline=now + deadline_seconds
+                if deadline_seconds is not None else None))
+            return request.request_id
 
     @property
     def active(self) -> bool:
-        return bool(self.queue) or any(s.request for s in self.slots)
+        with self._lock:
+            return bool(self.queue) or any(s.pending for s in self.slots)
 
-    def _fill_slots(self) -> None:
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self.queue)
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return sum(1 for s in self.slots if s.pending is not None)
+
+    def _finish(self, rid: str, res: ServerResult) -> None:
+        # caller holds the lock; abandoned requests' results are dropped
+        # (their waiter already gave up — retaining them would leak)
+        if rid in self._abandoned:
+            self._abandoned.discard(rid)
+            return
+        self.results[rid] = res
+
+    def _expire_queued(self, now: float) -> int:
+        """Cancel queued requests whose deadline passed before a slot
+        freed up: they complete as ``deadline_exceeded`` errors without
+        ever occupying a slot."""
+        expired = 0
+        keep: List[_Pending] = []
+        for pending in self.queue:
+            if pending.deadline is not None and now > pending.deadline:
+                waited = now - pending.submitted_at
+                self._finish(pending.request.request_id, ServerResult(
+                    request_id=pending.request.request_id,
+                    error=f"deadline_exceeded: cancelled after "
+                          f"{waited:.3f}s in queue, never admitted",
+                    seconds=waited, queue_seconds=waited))
+                expired += 1
+            else:
+                keep.append(pending)
+        if expired:
+            self.queue[:] = keep
+        return expired
+
+    def _fill_slots(self, now: float) -> None:
         for slot in self.slots:
-            if slot.request is None and self.queue:
-                req = self.queue.pop(0)
-                slot.request = req
-                slot.admitted_at = time.perf_counter()
-                slot.future = self.service.submit_async(req)
+            if slot.pending is None and self.queue:
+                pending = self.queue.pop(0)
+                slot.pending = pending
+                slot.admitted_at = now
+                slot.future = self.service.submit_async(pending.request)
 
-    def _harvest(self) -> int:
+    def _harvest(self, now: float) -> int:
         done = 0
         for slot in self.slots:
-            if slot.request is None or not slot.future.done():
+            if slot.pending is None or not slot.future.done():
                 continue
-            rid = slot.request.request_id
+            pending = slot.pending
+            rid = pending.request.request_id
             res = ServerResult(
                 request_id=rid,
-                seconds=time.perf_counter() - slot.admitted_at)
+                queue_seconds=slot.admitted_at - pending.submitted_at,
+                service_seconds=now - slot.admitted_at,
+                seconds=now - pending.submitted_at)
             try:
                 out = slot.future.result()
                 if isinstance(out, dict):
@@ -101,23 +212,111 @@ class AnalysisServer:
                     res.diagnosis = out
             except Exception as e:  # noqa: BLE001 - report failures as results
                 res.error = f"{type(e).__name__}: {e}"
-            self.results[rid] = res
-            slot.request = None
+            self._finish(rid, res)
+            slot.pending = None
             slot.future = None
             done += 1
         return done
 
     def tick(self) -> int:
-        """One engine step: admit queued requests, harvest completions.
-        Returns the number of requests finished this tick."""
-        self._fill_slots()
-        return self._harvest()
+        """One engine step: expire overdue queued requests, admit to free
+        slots, harvest completions.  Returns requests finished this tick
+        (deadline cancellations included)."""
+        with self._lock:
+            now = time.monotonic()
+            expired = self._expire_queued(now)
+            self._fill_slots(now)
+            done = expired + self._harvest(now)
+            if done:
+                self._done.notify_all()
+            return done
 
     def run(self, poll_seconds: float = 0.005) -> Dict[str, ServerResult]:
         while self.active:
             if self.tick() == 0:
                 time.sleep(poll_seconds)
         return self.results
+
+    # -- front-end surface (the networked half consumes these) ----------------
+
+    def wait(self, request_id: str,
+             timeout: Optional[float] = None) -> Optional[ServerResult]:
+        """Block until ``request_id`` finishes and pop its result; None on
+        timeout (the caller decides whether to :meth:`abandon`)."""
+        deadline = time.monotonic() + timeout if timeout is not None \
+            else None
+        with self._done:
+            while request_id not in self.results:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                self._done.wait(remaining)
+            return self.results.pop(request_id)
+
+    def abandon(self, request_id: str) -> Optional[ServerResult]:
+        """Give up on a request: drop it from the queue if still waiting,
+        or mark it so its eventual result is discarded (the analysis
+        itself is not interrupted — the service pool finishes and the
+        warm cache keeps the work).  Returns the result if it raced in
+        just before abandonment."""
+        with self._lock:
+            raced = self.results.pop(request_id, None)
+            if raced is not None:
+                return raced
+            before = len(self.queue)
+            self.queue[:] = [p for p in self.queue
+                             if p.request.request_id != request_id]
+            if len(self.queue) == before:        # queued nowhere: in flight
+                self._abandoned.add(request_id)
+            return None
+
+    def begin_drain(self) -> None:
+        """Stop admitting (``submit`` raises :class:`ServerDraining`);
+        queued + in-flight work keeps going."""
+        with self._lock:
+            self._draining = True
+
+    def drain(self, timeout: Optional[float] = None,
+              poll_seconds: float = 0.01) -> bool:
+        """`begin_drain` then wait until queued + in-flight work is
+        finished.  True when fully drained; False on timeout.  Needs a
+        running ticker (or an external ``tick()`` driver)."""
+        self.begin_drain()
+        deadline = time.monotonic() + timeout if timeout is not None \
+            else None
+        while self.active:
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            if self._ticker is None:
+                self.tick()
+            time.sleep(poll_seconds)
+        return True
+
+    def start_ticker(self, poll_seconds: float = 0.002) -> None:
+        """Run ``tick()`` on a daemon thread — the drive loop the HTTP
+        front-end relies on while its handler threads block in
+        :meth:`wait`."""
+        if self._ticker is not None:
+            return
+        self._ticker_stop.clear()
+
+        def loop() -> None:
+            while not self._ticker_stop.is_set():
+                if self.tick() == 0:
+                    self._ticker_stop.wait(poll_seconds)
+
+        self._ticker = threading.Thread(target=loop, daemon=True,
+                                        name="leo-analysis-ticker")
+        self._ticker.start()
+
+    def stop_ticker(self) -> None:
+        if self._ticker is None:
+            return
+        self._ticker_stop.set()
+        self._ticker.join(timeout=5.0)
+        self._ticker = None
 
 
 # --------------------------------------------------------------------------
@@ -269,7 +468,47 @@ def main(argv=None) -> Dict[str, ServerResult]:
     ap.add_argument("--cache-dir", default=None,
                     help="content-addressed disk cache shared across runs")
     ap.add_argument("--hints-devices", type=int, default=8)
+    ap.add_argument("--serve", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP on PORT (0 = ephemeral) instead "
+                         "of running a one-shot batch; SIGTERM drains "
+                         "gracefully (see docs/serving.md)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --serve")
+    ap.add_argument("--max-queue", type=int, default=16,
+                    help="bounded admission queue for --serve; full = "
+                         "429 + Retry-After")
+    ap.add_argument("--retry-after", type=float, default=0.25,
+                    help="Retry-After seconds hinted on 429/503 sheds")
+    ap.add_argument("--default-deadline", type=float, default=None,
+                    help="deadline applied to --serve requests that do "
+                         "not carry their own")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound --serve port to this file once "
+                         "listening (how scripts find an ephemeral port)")
     args = ap.parse_args(argv)
+
+    if args.serve is not None:
+        # the networked front-end: stdlib HTTP around this engine's slots
+        from ..serve.httpd import LeoHttpd, serve_forever
+        from ..serve.metrics import MetricsRegistry
+        metrics = MetricsRegistry()
+        service = LeoService(cache_dir=args.cache_dir,
+                             max_workers=max(args.slots, 2),
+                             metrics=metrics)
+        app = LeoHttpd(service=service, host=args.host, port=args.serve,
+                       slots=args.slots, max_queue=args.max_queue,
+                       retry_after_seconds=args.retry_after,
+                       default_deadline_seconds=args.default_deadline,
+                       metrics=metrics)
+        if args.port_file:
+            with open(args.port_file, "w") as f:
+                f.write(str(app.port))
+        print(f"leo-serve listening on http://{args.host}:{app.port} "
+              f"({args.slots} slots, queue {args.max_queue}); "
+              f"SIGTERM drains", flush=True)
+        serve_forever(app)
+        print("leo-serve drained cleanly", flush=True)
+        return {}
 
     if not args.hlo and not args.smoke:
         ap.error("give --hlo file(s) or --smoke")
@@ -318,9 +557,17 @@ def main(argv=None) -> Dict[str, ServerResult]:
             top = d.root_causes[0]["instruction"] if d.root_causes else "-"
             print(f"{rid} [{d.backend}]: "
                   f"est {d.estimated_step_seconds*1e6:9.1f} us, "
+                  f"queued {res.queue_seconds*1e3:6.1f} ms + "
+                  f"service {res.service_seconds*1e3:7.1f} ms, "
                   f"top root cause: {top}")
     stats = service.stats_dict()
-    print(f"\n{len(results)} requests via {len(server.slots)} slots in "
+    ok = [r for r in results.values() if r.error is None]
+    if ok:
+        mean_q = sum(r.queue_seconds for r in ok) / len(ok)
+        mean_s = sum(r.service_seconds for r in ok) / len(ok)
+        print(f"\nmean queue wait {mean_q*1e3:.1f} ms, "
+              f"mean service {mean_s*1e3:.1f} ms over {len(ok)} ok")
+    print(f"{len(results)} requests via {len(server.slots)} slots in "
           f"{wall:.2f}s; parses: {stats['parse_calls']} calls -> "
           f"{service.stats.parse_misses} actual "
           f"(+{stats['parse_disk_hits']} from disk), "

@@ -129,6 +129,17 @@ def _parse_flags(spec: str) -> dict:
 
 
 _SERVICES = {}
+_METRICS = None
+
+
+def get_metrics():
+    """Process-wide MetricsRegistry shared by every per-outdir service,
+    so a sweep's `--metrics-out` dump covers all cells."""
+    global _METRICS
+    if _METRICS is None:
+        from ..serve.metrics import MetricsRegistry
+        _METRICS = MetricsRegistry()
+    return _METRICS
 
 
 def get_service(outdir: str):
@@ -143,7 +154,8 @@ def get_service(outdir: str):
     if svc is None:
         svc = LeoService(cache_dir=os.path.join(outdir, ".leo_cache"),
                          disk_cache_max_bytes=512 * 2**20,
-                         disk_cache_ttl_seconds=14 * 24 * 3600.0)
+                         disk_cache_ttl_seconds=14 * 24 * 3600.0,
+                         metrics=get_metrics())
         _SERVICES[outdir] = svc
     return svc
 
@@ -232,6 +244,9 @@ def main() -> None:
                     help="model flags, e.g. attention_impl=pallas_fused,"
                          "ssm_fused=true,ssm_pallas=true,"
                          "moe_impl=ep_shardmap")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the analysis-cache/latency metrics "
+                         "(Prometheus text format) to PATH after the sweep")
     args = ap.parse_args()
     model_flags = _parse_flags(args.flags)
 
@@ -255,6 +270,10 @@ def main() -> None:
                              model_flags=model_flags)
                 if r.get("status") == "error":
                     failures += 1
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(get_metrics().render())
+        print(f"wrote metrics to {args.metrics_out}")
     print(f"\ndry-run complete; {failures} failures")
     raise SystemExit(1 if failures else 0)
 

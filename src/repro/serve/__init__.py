@@ -1,0 +1,68 @@
+"""repro.serve — networked diagnosis serving.
+
+The stdlib-only network layer over the analysis stack:
+
+  * :mod:`repro.serve.protocol` — versioned JSON wire format with
+    Diagnosis schema negotiation (v1–v3 migration across the wire);
+  * :mod:`repro.serve.httpd` — backpressure-aware HTTP front-end
+    (bounded admission, 429 + Retry-After shedding, per-request
+    deadlines, graceful SIGTERM drain);
+  * :mod:`repro.serve.client` — retrying ``LeoClient`` with capped
+    jittered backoff and a pipelined ``diagnose_batch``;
+  * :mod:`repro.serve.metrics` — counter/gauge/histogram registry with
+    a Prometheus-text ``/metrics`` renderer.
+
+This module stays import-light: ``repro.serve`` pulls no accelerator
+dependencies (the slot engine under ``repro.launch`` is imported lazily
+by the front-end at construction time).
+"""
+from .client import LeoClient, LeoClientError, RetriesExceeded
+from .httpd import LeoHttpd, serve_forever
+from .metrics import (
+    LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from .protocol import (
+    ERROR_CODES,
+    MIN_PROTOCOL_VERSION,
+    PROTOCOL_VERSION,
+    ProtocolError,
+    WireRequest,
+    WireResponse,
+    decode_request,
+    decode_response,
+    downgrade_diagnosis_dict,
+    encode_error,
+    encode_request,
+    encode_result,
+    negotiate_schema,
+)
+
+__all__ = [
+    "LeoClient",
+    "LeoClientError",
+    "RetriesExceeded",
+    "LeoHttpd",
+    "serve_forever",
+    "LATENCY_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "ERROR_CODES",
+    "MIN_PROTOCOL_VERSION",
+    "PROTOCOL_VERSION",
+    "ProtocolError",
+    "WireRequest",
+    "WireResponse",
+    "decode_request",
+    "decode_response",
+    "downgrade_diagnosis_dict",
+    "encode_error",
+    "encode_request",
+    "encode_result",
+    "negotiate_schema",
+]

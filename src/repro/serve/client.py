@@ -1,0 +1,323 @@
+"""`LeoClient`: the retrying, pipelining HTTP client for `repro.serve`.
+
+The consumer half of the wire protocol: typed
+:class:`~repro.core.service.AnalyzeRequest` in, migrated
+:class:`~repro.core.report.Diagnosis` out, with the transport behavior a
+production caller needs and the core schema deliberately does not carry:
+
+  * **timeouts** — one socket timeout for connect/read; per-request
+    ``deadline_seconds`` rides the wire envelope so the *server* also
+    stops working on an abandoned request;
+  * **retries** — capped exponential backoff with equal jitter on 429 /
+    503 / 5xx / connection errors, honoring the server's ``Retry-After``
+    hint when it is larger than the computed backoff.  4xx protocol and
+    validation errors never retry (they will not get better);
+  * **pipelining** — ``diagnose_batch`` fans a request list over a small
+    pool of persistent keep-alive connections (order-preserving);
+  * **schema negotiation** — the client advertises ``accept_schema``
+    (its own generation by default); older-generation responses are
+    migrated forward by ``Diagnosis.from_dict`` exactly like a warm
+    disk cache surviving a schema bump.
+
+::
+
+    with LeoClient(port=8321) as client:
+        diag = client.diagnose(hlo_text, backend="tpu_v5e")
+        per_vendor = client.diagnose(hlo_text, backends=["tpu_v5e",
+                                                         "amd_mi300a"])
+        diags = client.diagnose_batch(requests)     # pipelined
+"""
+from __future__ import annotations
+
+import http.client
+import random
+import socket
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+from ..core.report import SCHEMA_VERSION, Diagnosis
+from ..core.service import AnalyzeRequest
+from .protocol import (
+    ProtocolError,
+    WireResponse,
+    decode_response,
+    encode_request,
+)
+
+#: HTTP statuses worth retrying: shed (429), draining (503), transient
+#: server trouble (other 5xx).
+RETRYABLE_STATUSES = frozenset({429, 500, 502, 503, 504})
+
+
+class LeoClientError(Exception):
+    """Terminal client-side failure (non-retryable status, or retry
+    budget exhausted).  ``status``/``code`` carry the last server
+    answer when there was one."""
+
+    def __init__(self, message: str, status: Optional[int] = None,
+                 code: Optional[str] = None):
+        super().__init__(message)
+        self.status = status
+        self.code = code
+
+
+class RetriesExceeded(LeoClientError):
+    """Every attempt failed retryably; ``attempts`` made, ``last`` holds
+    the final error."""
+
+    def __init__(self, attempts: int, last: Exception):
+        status = getattr(last, "status", None)
+        code = getattr(last, "code", None)
+        super().__init__(
+            f"request failed after {attempts} attempt(s); last error: "
+            f"{type(last).__name__}: {last}", status=status, code=code)
+        self.attempts = attempts
+        self.last = last
+
+
+class LeoClient:
+    """HTTP client for a live ``repro.serve`` front-end.
+
+    ``max_retries`` counts *re*-tries (0 = single attempt).  Backoff for
+    attempt ``k`` is equal-jittered ``min(cap, base * 2**k)`` — half
+    deterministic, half uniform-random — then raised to the server's
+    ``Retry-After`` hint if that is larger.  Pass ``rng`` (any
+    ``random.Random``) to make backoff deterministic in tests.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 8321, *,
+                 timeout: float = 60.0,
+                 max_retries: int = 5,
+                 backoff_base_seconds: float = 0.05,
+                 backoff_cap_seconds: float = 2.0,
+                 accept_schema: int = SCHEMA_VERSION,
+                 rng: Optional[random.Random] = None):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+        self.max_retries = max_retries
+        self.backoff_base_seconds = backoff_base_seconds
+        self.backoff_cap_seconds = backoff_cap_seconds
+        self.accept_schema = accept_schema
+        self._rng = rng or random.Random()
+        self._rng_lock = threading.Lock()
+        self._local = threading.local()     # one persistent conn per thread
+        self._conns: List[http.client.HTTPConnection] = []
+        self._conns_lock = threading.Lock()
+        self.stats: Dict[str, int] = {
+            "attempts": 0, "retries": 0, "sheds_seen": 0,
+            "errors_5xx": 0, "connect_errors": 0, "deadline_hits": 0,
+        }
+        self._stats_lock = threading.Lock()
+
+    # -- connection plumbing ---------------------------------------------------
+
+    def _conn(self) -> http.client.HTTPConnection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = http.client.HTTPConnection(self.host, self.port,
+                                              timeout=self.timeout)
+            self._local.conn = conn
+            with self._conns_lock:
+                self._conns.append(conn)
+        return conn
+
+    def _reset_conn(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+
+    def close(self) -> None:
+        with self._conns_lock:
+            conns, self._conns = self._conns, []
+        for conn in conns:
+            conn.close()
+
+    def __enter__(self) -> "LeoClient":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def _bump(self, field: str, by: int = 1) -> None:
+        with self._stats_lock:
+            self.stats[field] += by
+
+    # -- raw HTTP with retry ---------------------------------------------------
+
+    def _backoff(self, attempt: int,
+                 retry_after: Optional[float]) -> float:
+        ceiling = min(self.backoff_cap_seconds,
+                      self.backoff_base_seconds * (2 ** attempt))
+        with self._rng_lock:
+            jittered = ceiling / 2 + self._rng.uniform(0, ceiling / 2)
+        if retry_after is not None:
+            jittered = max(jittered, retry_after)
+        return jittered
+
+    def _once(self, method: str, path: str,
+              body: Optional[bytes] = None) -> "tuple[int, dict, bytes]":
+        conn = self._conn()
+        headers = {"Content-Type": "application/json"} if body else {}
+        try:
+            conn.request(method, path, body=body, headers=headers)
+            resp = conn.getresponse()
+            payload = resp.read()       # drain: keep-alive stays usable
+            return resp.status, dict(resp.headers.items()), payload
+        except (ConnectionError, socket.timeout, socket.gaierror,
+                http.client.HTTPException, OSError):
+            # a broken keep-alive conn poisons every later request on
+            # this thread — drop it before the retry layer reconnects
+            self._reset_conn()
+            self._local.conn = None
+            raise
+
+    def _request(self, method: str, path: str,
+                 body: Optional[bytes] = None) -> "tuple[int, dict, bytes]":
+        """One logical request: up to ``1 + max_retries`` attempts with
+        backoff on retryable failures."""
+        last_error: Optional[Exception] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt > 0:
+                retry_after = None
+                if isinstance(last_error, LeoClientError) and \
+                        getattr(last_error, "retry_after", None) is not None:
+                    retry_after = last_error.retry_after
+                time.sleep(self._backoff(attempt - 1, retry_after))
+                self._bump("retries")
+            self._bump("attempts")
+            try:
+                status, headers, payload = self._once(method, path, body)
+            except (ConnectionError, socket.timeout, socket.gaierror,
+                    http.client.HTTPException, OSError) as e:
+                self._bump("connect_errors")
+                last_error = e
+                continue
+            if status in RETRYABLE_STATUSES:
+                if status == 429:
+                    self._bump("sheds_seen")
+                elif status >= 500:
+                    self._bump("errors_5xx")
+                if status == 504:
+                    self._bump("deadline_hits")
+                err = LeoClientError(
+                    f"{method} {path} -> {status}", status=status)
+                retry_after = headers.get("Retry-After")
+                err.retry_after = float(retry_after) \
+                    if retry_after is not None else None   # type: ignore
+                last_error = err
+                continue
+            if status >= 400:
+                # non-retryable (4xx): surface the typed error envelope
+                # when the server sent one — the caller gets the machine
+                # code, not a stringly wrapper
+                try:
+                    decode_response(payload).result()
+                except ProtocolError:
+                    raise
+                except Exception:   # noqa: BLE001 - not an envelope
+                    pass
+                raise LeoClientError(
+                    f"{method} {path} -> {status}: "
+                    f"{payload[:200].decode('utf-8', 'replace')}",
+                    status=status)
+            return status, headers, payload
+        raise RetriesExceeded(self.max_retries + 1, last_error)
+
+    # -- typed surface ---------------------------------------------------------
+
+    def submit(self, request: AnalyzeRequest, *,
+               deadline_seconds: Optional[float] = None
+               ) -> Union[Diagnosis, Dict[str, Diagnosis]]:
+        """Serve one typed request over the wire: a ``Diagnosis``, or a
+        ``{backend: Diagnosis}`` map for fan-out requests — the same
+        contract as ``LeoService.submit`` in-process."""
+        resp = self.submit_wire(request, deadline_seconds=deadline_seconds)
+        return resp.result()
+
+    def submit_wire(self, request: AnalyzeRequest, *,
+                    deadline_seconds: Optional[float] = None
+                    ) -> WireResponse:
+        """Like :meth:`submit` but returns the decoded envelope — for
+        callers that want the negotiated ``schema_version`` and server
+        ``timing`` alongside the payload."""
+        body = encode_request(request, accept_schema=self.accept_schema,
+                              deadline_seconds=deadline_seconds)
+        _, _, payload = self._request("POST", "/v1/analyze", body)
+        return decode_response(payload)
+
+    def diagnose(self, hlo_text: str, *,
+                 backend: Optional[str] = None,
+                 backends: Optional[Sequence[str]] = None,
+                 hints: Optional[Dict[str, Any]] = None,
+                 n_chains: int = 5,
+                 prune_unexecuted: bool = True,
+                 deadline_seconds: Optional[float] = None
+                 ) -> Union[Diagnosis, Dict[str, Diagnosis]]:
+        return self.submit(AnalyzeRequest(
+            hlo_text=hlo_text, backend=backend,
+            backends=list(backends) if backends is not None else None,
+            hints=hints, n_chains=n_chains,
+            prune_unexecuted=prune_unexecuted),
+            deadline_seconds=deadline_seconds)
+
+    def diagnose_batch(self, requests: Sequence[AnalyzeRequest], *,
+                       max_connections: int = 4,
+                       deadline_seconds: Optional[float] = None
+                       ) -> List[Union[Diagnosis, Dict[str, Diagnosis]]]:
+        """Pipeline a batch over up to ``max_connections`` persistent
+        connections (one per worker thread); order-preserving.  The
+        first terminal failure propagates after the batch settles."""
+        requests = list(requests)
+        if len(requests) <= 1:
+            return [self.submit(r, deadline_seconds=deadline_seconds)
+                    for r in requests]
+        with ThreadPoolExecutor(
+                max_workers=min(max_connections, len(requests)),
+                thread_name_prefix="leo-client") as pool:
+            futs = [pool.submit(self.submit, r,
+                                deadline_seconds=deadline_seconds)
+                    for r in requests]
+            return [f.result() for f in futs]
+
+    # -- health / telemetry ----------------------------------------------------
+
+    def healthz(self) -> bool:
+        status, _, _ = self._request("GET", "/healthz")
+        return status == 200
+
+    def readyz(self) -> bool:
+        """True when the server is admitting.  Unlike other calls, a
+        503 here is an *answer*, not a failure — no retries burned."""
+        try:
+            status, _, _ = self._once("GET", "/readyz")
+        except (ConnectionError, socket.timeout,
+                http.client.HTTPException, OSError):
+            return False
+        return status == 200
+
+    def metrics_text(self) -> str:
+        _, _, payload = self._request("GET", "/metrics")
+        return payload.decode("utf-8")
+
+    def server_stats(self) -> Dict[str, Any]:
+        import json
+        _, _, payload = self._request("GET", "/stats")
+        return json.loads(payload)
+
+    def wait_ready(self, timeout: float = 10.0,
+                   poll_seconds: float = 0.05) -> bool:
+        """Poll ``/readyz`` until the server admits (fresh processes
+        take a moment to bind + warm); True when it did."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.readyz():
+                return True
+            time.sleep(poll_seconds)
+        return False
+
+    def __repr__(self) -> str:
+        return (f"LeoClient(http://{self.host}:{self.port}, "
+                f"retries={self.max_retries}, stats={self.stats})")

@@ -1,0 +1,370 @@
+"""End-to-end serving tests over real sockets: LeoClient against a live
+``LeoHttpd`` on an ephemeral port.
+
+Covers the PR's acceptance contract: wire results byte-identical to
+in-process ``LeoService.submit``; a full queue sheds 429 + Retry-After
+and client backoff retries through it; cross-version clients round-trip
+via the schema migration; N concurrent clients cost one parse; deadlines
+answer 504; /metrics reports the serving catalog; drain is graceful.
+"""
+import http.client
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core.report import (
+    ISSUE_PRESSURE_NOT_RECORDED,
+    SCHEMA_VERSION,
+    Diagnosis,
+)
+from repro.core.service import AnalyzeRequest, LeoService
+from repro.serve import (
+    LeoClient,
+    LeoHttpd,
+    MetricsRegistry,
+    ProtocolError,
+    RetriesExceeded,
+    encode_request,
+)
+
+
+class _BlockingService(LeoService):
+    """A LeoService whose analyses park on an Event — the deterministic
+    way to hold a slot occupied while tests probe admission control,
+    instead of racing against real pipeline latency."""
+
+    def __init__(self, **kwargs):
+        super().__init__(**kwargs)
+        self.gate = threading.Event()
+
+    def submit(self, request):
+        self.gate.wait(timeout=30.0)
+        return super().submit(request)
+
+
+def _post_raw(port, body, host="127.0.0.1", timeout=10.0):
+    """One raw POST /v1/analyze, no retries: (status, headers, payload)."""
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request("POST", "/v1/analyze", body=body,
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        return resp.status, dict(resp.headers.items()), resp.read()
+    finally:
+        conn.close()
+
+
+def _await(predicate, timeout=5.0, poll=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(poll)
+    return False
+
+
+class TestRoundTrip:
+    def test_byte_identical_to_in_process(self, async_hlo_text):
+        svc = LeoService()
+        with LeoHttpd(service=svc, port=0, slots=2) as app:
+            with LeoClient(port=app.port) as client:
+                req = AnalyzeRequest(hlo_text=async_hlo_text,
+                                     backend="tpu_v5e",
+                                     hints={"total_devices": 8})
+                wire_diag = client.submit(req)
+            inproc = svc.submit(AnalyzeRequest(
+                hlo_text=async_hlo_text, backend="tpu_v5e",
+                hints={"total_devices": 8}))
+        assert wire_diag.to_json() == inproc.to_json()
+
+    def test_fanout_and_timing(self, async_hlo_text):
+        with LeoHttpd(port=0, slots=2) as app:
+            with LeoClient(port=app.port) as client:
+                resp = client.submit_wire(AnalyzeRequest(
+                    hlo_text=async_hlo_text,
+                    backends=["tpu_v5e", "amd_mi300a"]))
+        assert resp.kind == "fanout"
+        fanout = resp.result()
+        assert sorted(fanout) == ["amd_mi300a", "tpu_v5e"]
+        assert all(isinstance(d, Diagnosis) for d in fanout.values())
+        # satellite: queue/service split surfaces in the wire timing
+        assert resp.timing["queue_seconds"] >= 0
+        assert resp.timing["service_seconds"] > 0
+        assert resp.timing["seconds"] == pytest.approx(
+            resp.timing["queue_seconds"] + resp.timing["service_seconds"],
+            abs=1e-6)
+
+    def test_batch_pipelines(self, async_hlo_text, copystorm_hlo_text):
+        with LeoHttpd(port=0, slots=4) as app:
+            with LeoClient(port=app.port) as client:
+                reqs = [AnalyzeRequest(hlo_text=t, backend="tpu_v5e")
+                        for t in (async_hlo_text, copystorm_hlo_text,
+                                  async_hlo_text)]
+                out = client.diagnose_batch(reqs)
+        assert len(out) == 3
+        # order-preserving: duplicates land identical
+        assert out[0].to_json() == out[2].to_json()
+        assert out[1].to_json() != out[0].to_json()
+
+    def test_invalid_request_is_400_not_retried(self, async_hlo_text):
+        with LeoHttpd(port=0, slots=1) as app:
+            with LeoClient(port=app.port, max_retries=3) as client:
+                with pytest.raises(ProtocolError):
+                    client.diagnose("")     # empty hlo_text
+                assert client.stats["retries"] == 0
+
+
+class TestBackpressure:
+    def test_full_queue_sheds_429_and_backoff_succeeds(
+            self, async_hlo_text, copystorm_hlo_text):
+        svc = _BlockingService(max_workers=4)
+        body = encode_request(AnalyzeRequest(hlo_text=async_hlo_text,
+                                             backend="tpu_v5e"))
+        with LeoHttpd(service=svc, port=0, slots=1, max_queue=1,
+                      retry_after_seconds=0.05) as app:
+            try:
+                # occupy the slot, then the queue
+                t1 = threading.Thread(target=_post_raw,
+                                      args=(app.port, body), daemon=True)
+                t1.start()
+                assert _await(lambda: app.engine.in_flight == 1)
+                body2 = encode_request(AnalyzeRequest(
+                    hlo_text=copystorm_hlo_text, backend="tpu_v5e"))
+                t2 = threading.Thread(target=_post_raw,
+                                      args=(app.port, body2), daemon=True)
+                t2.start()
+                assert _await(lambda: app.engine.queue_depth == 1)
+
+                # 3rd concurrent request: shed with the retry hint
+                status, headers, payload = _post_raw(app.port, body)
+                assert status == 429
+                assert float(headers["Retry-After"]) == \
+                    pytest.approx(0.05)
+                envelope = json.loads(payload)
+                assert envelope["error"]["code"] == "overloaded"
+
+                # a retrying client parked on the full queue wins once
+                # the gate opens
+                result = {}
+
+                def retrying():
+                    with LeoClient(port=app.port, max_retries=20,
+                                   backoff_base_seconds=0.02,
+                                   backoff_cap_seconds=0.1) as c:
+                        result["diag"] = c.diagnose(async_hlo_text,
+                                                    backend="tpu_v5e")
+                        result["stats"] = dict(c.stats)
+
+                t3 = threading.Thread(target=retrying, daemon=True)
+                t3.start()
+                assert _await(
+                    lambda: app.m_sheds.value() >= 2, timeout=5.0)
+                svc.gate.set()
+                t3.join(timeout=30.0)
+                assert "diag" in result, "retrying client never succeeded"
+                assert result["stats"]["sheds_seen"] >= 1
+                assert result["diag"].backend == "tpu_v5e"
+                for t in (t1, t2):
+                    t.join(timeout=30.0)
+            finally:
+                svc.gate.set()
+
+    def test_no_retries_surfaces_retries_exceeded(self, async_hlo_text):
+        svc = _BlockingService(max_workers=4)
+        with LeoHttpd(service=svc, port=0, slots=1, max_queue=1) as app:
+            try:
+                body = encode_request(AnalyzeRequest(
+                    hlo_text=async_hlo_text, backend="tpu_v5e"))
+                t1 = threading.Thread(target=_post_raw,
+                                      args=(app.port, body), daemon=True)
+                t1.start()
+                assert _await(lambda: app.engine.in_flight == 1)
+                t2 = threading.Thread(target=_post_raw,
+                                      args=(app.port, body), daemon=True)
+                t2.start()
+                assert _await(lambda: app.engine.queue_depth == 1)
+                with LeoClient(port=app.port, max_retries=1,
+                               backoff_base_seconds=0.01) as client:
+                    with pytest.raises(RetriesExceeded) as ei:
+                        client.diagnose(async_hlo_text, backend="tpu_v5e")
+                assert ei.value.status == 429
+            finally:
+                svc.gate.set()
+
+
+class TestDeadlines:
+    def test_inflight_overdue_is_504_abandoned(self, async_hlo_text):
+        svc = _BlockingService(max_workers=4)
+        with LeoHttpd(service=svc, port=0, slots=1) as app:
+            try:
+                body = encode_request(
+                    AnalyzeRequest(hlo_text=async_hlo_text,
+                                   backend="tpu_v5e"),
+                    deadline_seconds=0.3)
+                t0 = time.monotonic()
+                status, _, payload = _post_raw(app.port, body)
+                took = time.monotonic() - t0
+                assert status == 504
+                assert json.loads(payload)["error"]["code"] == \
+                    "deadline_exceeded"
+                assert took < 5.0       # gave up near the deadline
+                assert app.m_deadline.value() == 1
+            finally:
+                svc.gate.set()
+
+    def test_queued_overdue_cancelled_without_slot(self, async_hlo_text,
+                                                   copystorm_hlo_text):
+        svc = _BlockingService(max_workers=4)
+        with LeoHttpd(service=svc, port=0, slots=1, max_queue=4) as app:
+            try:
+                blocker = encode_request(AnalyzeRequest(
+                    hlo_text=async_hlo_text, backend="tpu_v5e"))
+                t1 = threading.Thread(target=_post_raw,
+                                      args=(app.port, blocker), daemon=True)
+                t1.start()
+                assert _await(lambda: app.engine.in_flight == 1)
+                doomed = encode_request(
+                    AnalyzeRequest(hlo_text=copystorm_hlo_text,
+                                   backend="tpu_v5e"),
+                    deadline_seconds=0.2)
+                status, _, payload = _post_raw(app.port, doomed)
+                assert status == 504
+                err = json.loads(payload)["error"]["message"]
+                assert "never admitted" in err
+            finally:
+                svc.gate.set()
+
+
+class TestCrossVersion:
+    def test_v2_client_against_v3_server(self, async_hlo_text):
+        """An old-generation client round-trips via the migration path:
+        the wire downgrade is the exact inverse of ``from_dict`` (same
+        payload shape as the committed v2 migration fixtures in
+        tests/test_syncmodel.py)."""
+        svc = LeoService()
+        with LeoHttpd(service=svc, port=0, slots=2) as app:
+            with LeoClient(port=app.port, accept_schema=2) as client:
+                resp = client.submit_wire(AnalyzeRequest(
+                    hlo_text=async_hlo_text, backend="tpu_v5e"))
+            inproc = svc.submit(AnalyzeRequest(hlo_text=async_hlo_text,
+                                               backend="tpu_v5e"))
+        assert resp.schema_version == 2
+        # a genuine v2 payload on the wire: the v3-only section is gone
+        assert "issue_pressure" not in resp.payload
+        assert resp.payload["schema_version"] == 2
+        migrated = resp.result()
+        assert migrated.schema_version == SCHEMA_VERSION
+        assert migrated.issue_pressure == ISSUE_PRESSURE_NOT_RECORDED
+        # identical to migrating the same v2 payload built by hand from
+        # the in-process diagnosis (the test_syncmodel fixture recipe)
+        v2_by_hand = inproc.to_dict()
+        del v2_by_hand["issue_pressure"]
+        v2_by_hand["schema_version"] = 2
+        assert migrated.to_json() == \
+            Diagnosis.from_dict(v2_by_hand).to_json()
+
+    def test_future_client_negotiates_down(self, async_hlo_text):
+        """A newer-generation client (accept_schema > server's) just gets
+        the server's newest — negotiation is min(), both directions."""
+        with LeoHttpd(port=0, slots=2) as app:
+            with LeoClient(port=app.port,
+                           accept_schema=SCHEMA_VERSION + 4) as client:
+                resp = client.submit_wire(AnalyzeRequest(
+                    hlo_text=async_hlo_text, backend="tpu_v5e"))
+        assert resp.schema_version == SCHEMA_VERSION
+        assert "issue_pressure" in resp.payload
+
+
+class TestConcurrency:
+    def test_n_clients_one_parse(self, copystorm_hlo_text):
+        """The single-flight invariant holds across the network: N
+        concurrent clients hammering one warm server cost exactly one
+        parse and one pipeline run (extends the in-process assertions in
+        tests/test_service.py to the wire)."""
+        svc = LeoService(max_workers=8)
+        n = 6
+        results = [None] * n
+        with LeoHttpd(service=svc, port=0, slots=4, max_queue=2 * n) as app:
+            barrier = threading.Barrier(n)
+
+            def hammer(i):
+                with LeoClient(port=app.port, max_retries=10,
+                               backoff_base_seconds=0.02) as c:
+                    barrier.wait()
+                    results[i] = c.diagnose(copystorm_hlo_text,
+                                            backend="tpu_v5e")
+
+            threads = [threading.Thread(target=hammer, args=(i,),
+                                        daemon=True) for i in range(n)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=60.0)
+        assert all(r is not None for r in results)
+        assert len({r.to_json() for r in results}) == 1
+        assert svc.stats.parse_misses == 1
+        assert svc.stats.analyze_calls - svc.stats.analyze_hits == 1
+
+
+class TestHealthMetricsDrain:
+    def test_endpoints_and_graceful_drain(self, async_hlo_text):
+        metrics = MetricsRegistry()
+        svc = LeoService(metrics=metrics)
+        app = LeoHttpd(service=svc, port=0, slots=2, metrics=metrics)
+        app.start()
+        client = LeoClient(port=app.port)
+        try:
+            assert client.healthz()
+            assert client.readyz()
+            client.diagnose(async_hlo_text, backend="tpu_v5e")
+            client.diagnose(async_hlo_text, backend="tpu_v5e")  # warm hit
+
+            text = client.metrics_text()
+            # the serving catalog: queue depth, sheds, cache tiers,
+            # latency histograms — all present, traffic counted
+            for name in ("leo_queue_depth", "leo_inflight_requests",
+                         "leo_sheds_total", "leo_admissions_total",
+                         "leo_deadline_exceeded_total", "leo_ready",
+                         "leo_queue_seconds_bucket",
+                         "leo_service_seconds_bucket",
+                         "leo_parse_seconds_bucket",
+                         "leo_pipeline_seconds_bucket"):
+                assert name in text, f"missing {name}"
+            assert 'leo_requests_total{endpoint="analyze",code="200"} 2' \
+                in text
+            assert ('leo_cache_requests_total{tier="diagnosis_memory",'
+                    'result="hit"} 1') in text
+            assert ('leo_cache_requests_total{tier="diagnosis_memory",'
+                    'result="miss"} 1') in text
+            assert 'leo_diagnoses_total{backend="tpu_v5e"} 2' in text
+            assert "leo_ready 1" in text
+
+            stats = client.server_stats()
+            assert stats["diagnosis_hits"] == 1
+
+            # drain: readyz flips, new admissions 503, in-flight finishes
+            app.engine.begin_drain()
+            assert not client.readyz()
+            with pytest.raises(RetriesExceeded) as ei:
+                with LeoClient(port=app.port, max_retries=1,
+                               backoff_base_seconds=0.01) as c2:
+                    c2.diagnose(async_hlo_text, backend="tpu_v5e")
+            assert ei.value.status == 503
+        finally:
+            client.close()
+            assert app.drain(timeout=10.0)
+
+    def test_not_found_and_method_errors(self):
+        with LeoHttpd(port=0, slots=1) as app:
+            conn = http.client.HTTPConnection("127.0.0.1", app.port,
+                                              timeout=5.0)
+            try:
+                conn.request("GET", "/nope")
+                resp = conn.getresponse()
+                payload = resp.read()
+                assert resp.status == 404
+                assert json.loads(payload)["error"]["code"] == "not_found"
+            finally:
+                conn.close()

@@ -1,0 +1,259 @@
+"""Unit tests for the serving wire protocol and the metrics registry —
+the two halves of ``repro.serve`` that need no sockets."""
+import json
+
+import pytest
+
+from repro.core.report import (
+    ISSUE_PRESSURE_NOT_RECORDED,
+    MIN_SCHEMA_VERSION,
+    SCHEMA_VERSION,
+    SYNC_RESOURCES_NOT_RECORDED,
+    Diagnosis,
+)
+from repro.core.service import AnalyzeRequest, LeoService
+from repro.serve.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.serve.protocol import (
+    PROTOCOL_VERSION,
+    ProtocolError,
+    decode_request,
+    decode_response,
+    downgrade_diagnosis_dict,
+    encode_error,
+    encode_request,
+    encode_result,
+    negotiate_schema,
+)
+
+
+@pytest.fixture
+def diagnosis(async_hlo_text):
+    # one process-wide service: the session caches make every test after
+    # the first answer from memory
+    return _SVC.diagnose(async_hlo_text, backend="tpu_v5e")
+
+
+_SVC = LeoService()
+
+
+# --------------------------------------------------------------------------
+# Requests.
+# --------------------------------------------------------------------------
+
+class TestRequestEnvelope:
+    def test_round_trip(self, async_hlo_text):
+        req = AnalyzeRequest(hlo_text=async_hlo_text, backend="tpu_v5e",
+                             hints={"total_devices": 8}, n_chains=3)
+        wire = decode_request(encode_request(req, deadline_seconds=2.5))
+        assert wire.request.hlo_text == req.hlo_text
+        assert wire.request.backend == "tpu_v5e"
+        assert wire.request.hints == {"total_devices": 8}
+        assert wire.request.n_chains == 3
+        assert wire.deadline_seconds == 2.5
+        assert wire.negotiated_schema == SCHEMA_VERSION
+        assert wire.protocol_version == PROTOCOL_VERSION
+
+    def test_schema_version_not_pinned_on_the_wire(self, async_hlo_text):
+        """The request body must NOT carry the sender's schema_version —
+        that is what lets a v2-era client talk to a v3 server (the
+        receiver re-pins to its own generation before validate())."""
+        req = AnalyzeRequest(hlo_text=async_hlo_text)
+        body = json.loads(encode_request(req))
+        assert "schema_version" not in body["request"]
+        # a sender from another generation decodes fine
+        wire = decode_request(encode_request(req, accept_schema=2))
+        assert wire.request.schema_version == SCHEMA_VERSION
+        assert wire.negotiated_schema == 2
+
+    def test_bad_json(self):
+        with pytest.raises(ProtocolError) as ei:
+            decode_request(b"{nope")
+        assert ei.value.code == "bad_json"
+        assert ei.value.http_status == 400
+
+    def test_unsupported_protocol_version(self, async_hlo_text):
+        body = json.loads(encode_request(AnalyzeRequest(
+            hlo_text=async_hlo_text)))
+        body["protocol_version"] = PROTOCOL_VERSION + 10
+        with pytest.raises(ProtocolError) as ei:
+            decode_request(json.dumps(body))
+        assert ei.value.code == "protocol_version"
+
+    def test_invalid_request_body(self):
+        payload = json.dumps({"protocol_version": PROTOCOL_VERSION,
+                              "request": {"hlo_text": ""}})
+        with pytest.raises(ProtocolError) as ei:
+            decode_request(payload)
+        assert ei.value.code == "invalid_request"
+
+    def test_bad_deadline(self, async_hlo_text):
+        body = json.loads(encode_request(AnalyzeRequest(
+            hlo_text=async_hlo_text)))
+        body["deadline_seconds"] = -1
+        with pytest.raises(ProtocolError) as ei:
+            decode_request(json.dumps(body))
+        assert ei.value.code == "invalid_request"
+
+
+# --------------------------------------------------------------------------
+# Schema negotiation + downgrade.
+# --------------------------------------------------------------------------
+
+class TestSchemaNegotiation:
+    def test_negotiate(self):
+        assert negotiate_schema(SCHEMA_VERSION) == SCHEMA_VERSION
+        assert negotiate_schema(SCHEMA_VERSION + 5) == SCHEMA_VERSION
+        assert negotiate_schema(2) == 2
+        with pytest.raises(ProtocolError):
+            negotiate_schema(MIN_SCHEMA_VERSION - 1)
+
+    def test_downgrade_drops_newer_sections(self, diagnosis):
+        full = diagnosis.to_dict()
+        v2 = downgrade_diagnosis_dict(full, 2)
+        assert v2["schema_version"] == 2
+        assert "issue_pressure" not in v2
+        assert "sync_resources" in v2
+        v1 = downgrade_diagnosis_dict(full, 1)
+        assert "issue_pressure" not in v1
+        assert "sync_resources" not in v1
+        # the input is never mutated
+        assert "issue_pressure" in full
+        assert full["schema_version"] == SCHEMA_VERSION
+
+    def test_downgrade_then_migrate_forward(self, diagnosis):
+        """The wire downgrade and the reader's from_dict migration are
+        exact inverses up to the explicit 'not recorded' defaults —
+        the same contract the disk cache already honors."""
+        v2 = downgrade_diagnosis_dict(diagnosis.to_dict(), 2)
+        migrated = Diagnosis.from_dict(v2)
+        assert migrated.schema_version == SCHEMA_VERSION
+        assert migrated.issue_pressure == ISSUE_PRESSURE_NOT_RECORDED
+        assert migrated.sync_resources == diagnosis.sync_resources
+        v1 = downgrade_diagnosis_dict(diagnosis.to_dict(), 1)
+        migrated = Diagnosis.from_dict(v1)
+        assert migrated.sync_resources == SYNC_RESOURCES_NOT_RECORDED
+
+    def test_upgrade_on_the_wire_rejected(self, diagnosis):
+        v2 = downgrade_diagnosis_dict(diagnosis.to_dict(), 2)
+        with pytest.raises(ProtocolError):
+            downgrade_diagnosis_dict(v2, SCHEMA_VERSION)
+
+
+# --------------------------------------------------------------------------
+# Responses.
+# --------------------------------------------------------------------------
+
+class TestResponseEnvelope:
+    def test_diagnosis_round_trip(self, diagnosis):
+        payload = encode_result(diagnosis, request_id="req-7",
+                                timing={"queue_seconds": 0.01,
+                                        "service_seconds": 0.5,
+                                        "seconds": 0.51})
+        resp = decode_response(payload)
+        assert resp.ok and resp.kind == "diagnosis"
+        assert resp.request_id == "req-7"
+        assert resp.timing["service_seconds"] == 0.5
+        out = resp.result()
+        assert out.to_json() == diagnosis.to_json()
+
+    def test_fanout_round_trip(self, diagnosis):
+        payload = encode_result({"tpu_v5e": diagnosis,
+                                 "amd_mi300a": diagnosis})
+        resp = decode_response(payload)
+        assert resp.kind == "fanout"
+        out = resp.result()
+        assert sorted(out) == ["amd_mi300a", "tpu_v5e"]
+        assert out["tpu_v5e"].to_json() == diagnosis.to_json()
+
+    def test_downgraded_response(self, diagnosis):
+        resp = decode_response(encode_result(diagnosis, schema_version=2))
+        assert resp.schema_version == 2
+        assert "issue_pressure" not in resp.payload
+        migrated = resp.result()
+        assert migrated.issue_pressure == ISSUE_PRESSURE_NOT_RECORDED
+
+    def test_error_envelope(self):
+        payload, status = encode_error("overloaded", "queue full",
+                                       retry_after=0.25, request_id="r1")
+        assert status == 429
+        resp = decode_response(payload)
+        assert not resp.ok
+        with pytest.raises(ProtocolError) as ei:
+            resp.result()
+        assert ei.value.code == "overloaded"
+        assert ei.value.retry_after == 0.25
+
+    def test_undecodable_response(self):
+        with pytest.raises(ProtocolError):
+            decode_response(b"not json")
+        with pytest.raises(ProtocolError):
+            decode_response(json.dumps({"ok": True, "kind": "mystery"}))
+
+
+# --------------------------------------------------------------------------
+# Metrics registry.
+# --------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter(self):
+        reg = MetricsRegistry()
+        c = reg.counter("t_total", "help", labelnames=("kind",))
+        c.inc(kind="a")
+        c.inc(2, kind="a")
+        c.inc(kind="b")
+        assert c.value(kind="a") == 3
+        assert c.value(kind="b") == 1
+        with pytest.raises(ValueError):
+            c.inc(-1, kind="a")
+        with pytest.raises(ValueError):
+            c.inc(wrong="a")
+
+    def test_gauge_callback(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("t_depth", "help")
+        state = {"v": 5}
+        g.set_function(lambda: state["v"])
+        assert g.value() == 5
+        state["v"] = 9
+        assert "t_depth 9" in reg.render()
+
+    def test_histogram_buckets_cumulative(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("t_seconds", "help", buckets=(0.1, 1.0, 10.0))
+        for v in (0.05, 0.5, 5.0, 50.0):
+            h.observe(v)
+        text = reg.render()
+        assert 't_seconds_bucket{le="0.1"} 1' in text
+        assert 't_seconds_bucket{le="1"} 2' in text
+        assert 't_seconds_bucket{le="10"} 3' in text
+        assert 't_seconds_bucket{le="+Inf"} 4' in text
+        assert "t_seconds_count 4" in text
+        assert h.sum() == pytest.approx(55.55)
+
+    def test_get_or_create_shares_and_rejects_mismatch(self):
+        reg = MetricsRegistry()
+        a = reg.counter("t_total", "help")
+        assert reg.counter("t_total", "other help") is a
+        with pytest.raises(ValueError):
+            reg.gauge("t_total", "help")
+        with pytest.raises(ValueError):
+            reg.counter("t_total", "help", labelnames=("x",))
+
+    def test_render_format(self):
+        reg = MetricsRegistry()
+        reg.counter("t_b_total", "second").inc()
+        reg.gauge("t_a_depth", "first").set(2)
+        text = reg.render()
+        # name-sorted, HELP/TYPE headers, trailing newline
+        assert text.index("t_a_depth") < text.index("t_b_total")
+        assert "# HELP t_a_depth first" in text
+        assert "# TYPE t_b_total counter" in text
+        assert text.endswith("\n")
+
+    def test_instrument_classes_exported(self):
+        assert all(t is not None for t in (Counter, Gauge, Histogram))
