@@ -16,6 +16,13 @@ block.
 Wall-clock analysis time is also recorded (informational only — CI
 runners are too noisy to gate on).
 
+The PR-7 advisor lane rides along: on the 48-copy storm, a fresh-cache
+``diagnose(advise=True)`` (pipeline + what-if replays) must stay under
+3x a fresh-cache plain ``diagnose`` per GPU backend.  Both sides are
+best-of-N cold runs, so the ratio compares the same parse + pipeline
+work and isolates the advisor's replay overhead — the one knob
+``Advisor(max_candidates_per_rule=...)`` bounds.
+
   PYTHONPATH=src python -m benchmarks.bench_smoke            # gate
   PYTHONPATH=src python -m benchmarks.bench_smoke --update-baseline
 """
@@ -30,8 +37,14 @@ import time
 from typing import Dict, List
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
-DEFAULT_OUTPUT = "BENCH.json"
+DEFAULT_OUTPUT = "BENCH_pr7.json"
 DEFAULT_THRESHOLD = 0.10
+
+#: Advisor-lane gate: advise=True must cost < this multiple of the plain
+#: pipeline on the same cold cache (ISSUE PR-7 satellite).
+ADVISOR_GATE = 3.0
+ADVISOR_BACKENDS = ("nvidia_gh200", "amd_mi300a", "intel_pvc")
+ADVISOR_REPEATS = 3
 
 
 #: Table-IV workloads in the trimmed subset (one per family).
@@ -105,6 +118,56 @@ def run_bench() -> Dict[str, object]:
     }
 
 
+def advisor_lane() -> Dict[str, object]:
+    """Time plain vs advise=True diagnosis on the 48-copy storm.
+
+    Every timing is a fresh :class:`LeoService` (cold memory/disk tiers),
+    best-of-``ADVISOR_REPEATS`` — both sides pay the same parse +
+    pipeline, so the ratio isolates the advisor's what-if replays."""
+    from repro.core import LeoService
+    from repro.launch.analysis_server import copy_storm_hlo
+
+    hlo = copy_storm_hlo(48)
+
+    def best_of(backend: str, advise: bool) -> float:
+        best = math.inf
+        for _ in range(ADVISOR_REPEATS):
+            service = LeoService()
+            t0 = time.perf_counter()
+            service.diagnose(hlo, backend=backend, advise=advise)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    per_backend = {}
+    for backend in ADVISOR_BACKENDS:
+        pipeline_s = best_of(backend, advise=False)
+        advise_s = best_of(backend, advise=True)
+        per_backend[backend] = {
+            "pipeline_seconds": pipeline_s,
+            "advise_seconds": advise_s,
+            "ratio": advise_s / pipeline_s,
+        }
+    return {
+        "workload": "copystorm_48",
+        "gate_ratio": ADVISOR_GATE,
+        "repeats_best_of": ADVISOR_REPEATS,
+        "per_backend": per_backend,
+    }
+
+
+def advisor_failures(lane: Dict[str, object]) -> List[str]:
+    failures = []
+    for backend, row in sorted(lane["per_backend"].items()):
+        if row["ratio"] >= lane["gate_ratio"]:
+            failures.append(
+                f"{backend}: advise=True diagnosis took "
+                f"{row['advise_seconds']:.4f}s = {row['ratio']:.2f}x the "
+                f"plain pipeline ({row['pipeline_seconds']:.4f}s); the "
+                f"advisor lane gates at < {lane['gate_ratio']:.1f}x — "
+                f"did a rule start proposing unbounded candidates?")
+    return failures
+
+
 def compare(result: Dict[str, object], baseline: Dict[str, object],
             threshold: float) -> List[str]:
     """Drift beyond the threshold in EITHER direction, as messages.
@@ -156,6 +219,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     result = run_bench()
+    result["advisor"] = advisor_lane()
     with open(args.output, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -165,13 +229,24 @@ def main(argv=None) -> int:
           f"{result['wall_seconds_informational']:.2f}s)")
     for backend, geo in result["geomean_estimated_step_seconds"].items():
         print(f"  {backend:<16s} geomean est. step {geo:.4e}s")
+    adv = result["advisor"]
+    for backend, row in sorted(adv["per_backend"].items()):
+        print(f"  {backend:<16s} advise=True {row['advise_seconds']:.4f}s "
+              f"vs pipeline {row['pipeline_seconds']:.4f}s "
+              f"({row['ratio']:.2f}x, gate <{adv['gate_ratio']:.0f}x)")
+
+    adv_failures = advisor_failures(adv)
+    if adv_failures:
+        print("ADVISOR OVERHEAD GATE failed:", file=sys.stderr)
+        for msg in adv_failures:
+            print(f"  {msg}", file=sys.stderr)
 
     if args.update_baseline:
         with open(args.baseline, "w") as f:
             json.dump(result, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"baseline updated: {args.baseline}")
-        return 0
+        return 1 if adv_failures else 0
 
     if not os.path.exists(args.baseline):
         print(f"ERROR: no baseline at {args.baseline}; commit one with "
@@ -184,9 +259,12 @@ def main(argv=None) -> int:
         print("PERF REGRESSION vs committed baseline:", file=sys.stderr)
         for msg in failures:
             print(f"  {msg}", file=sys.stderr)
+    if failures or adv_failures:
         return 1
     print(f"perf gate OK: no backend >"
-          f"{args.threshold * 100:.0f}% slower than baseline")
+          f"{args.threshold * 100:.0f}% slower than baseline; advisor "
+          f"overhead < {adv['gate_ratio']:.0f}x on all "
+          f"{len(adv['per_backend'])} GPU backends")
     return 0
 
 

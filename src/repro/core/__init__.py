@@ -114,6 +114,7 @@ from .passes import (
 )
 from .pruning import prune
 from .report import (
+    ADVICE_NOT_RECORDED,
     MIN_SCHEMA_VERSION,
     SCHEMA_VERSION,
     Diagnosis,
@@ -138,7 +139,7 @@ from .sync_trace import add_sync_edges
 __all__ = [
     # service surface (typed requests / serializable diagnoses)
     "AnalyzeRequest", "Diagnosis", "LeoService", "Recommendation",
-    "MIN_SCHEMA_VERSION", "SCHEMA_VERSION",
+    "ADVICE_NOT_RECORDED", "MIN_SCHEMA_VERSION", "SCHEMA_VERSION",
     # cache tiers
     "DiskCache", "LRUCache",
     # session facade

@@ -46,10 +46,12 @@ from .isa import EdgeKind, Instruction, OpClass, StallClass
 #: reject (treat as cache miss) payloads from a newer schema generation.
 #: v2 added the ``sync_resources`` section (§III-E finite sync-resource
 #: pressure); v3 added the ``issue_pressure`` section (multi-stream
-#: issue-queue / scheduler-contention pressure).  Older payloads are still
-#: readable — ``from_dict`` migrates them with explicit "not recorded"
-#: defaults, so a warm disk cache survives each bump.
-SCHEMA_VERSION = 3
+#: issue-queue / scheduler-contention pressure); v4 added the ``advice``
+#: section (ranked what-if-replayed optimization advice from
+#: ``repro.advisor``).  Older payloads are still readable — ``from_dict``
+#: migrates them with explicit "not recorded" defaults, so a warm disk
+#: cache survives each bump.
+SCHEMA_VERSION = 4
 
 #: Oldest payload generation ``Diagnosis.from_dict`` can migrate forward.
 MIN_SCHEMA_VERSION = 1
@@ -64,6 +66,15 @@ SYNC_RESOURCES_NOT_RECORDED = {
 ISSUE_PRESSURE_NOT_RECORDED = {
     "recorded": False,
     "note": "not recorded (pre-v3 schema payload)",
+}
+
+#: The ``advice`` default: migrated pre-v4 payloads AND v4 diagnoses whose
+#: request did not opt into the advisor (``advise=False`` skips the what-if
+#: replays) — one constant, so both paths serialize identically and the
+#: wire inverse-migration test can compare them byte-for-byte.
+ADVICE_NOT_RECORDED = {
+    "recorded": False,
+    "note": "not recorded (advisor not run, or pre-v4 schema payload)",
 }
 
 
@@ -227,6 +238,12 @@ class Diagnosis:
     # profiles, pre-v3 payloads).
     issue_pressure: Dict[str, Any] = field(
         default_factory=lambda: dict(ISSUE_PRESSURE_NOT_RECORDED))
+    # Ranked optimization advice (schema v4): what-if-replayed candidate
+    # mutations from `repro.advisor` with modeled speedups and vendor-
+    # native phrasing, or {"recorded": False, ...} when the advisor was
+    # not run (advise=False requests, measured profiles, pre-v4 payloads).
+    advice: Dict[str, Any] = field(
+        default_factory=lambda: dict(ADVICE_NOT_RECORDED))
     schema_version: int = SCHEMA_VERSION
 
     # -- construction ----------------------------------------------------------
@@ -354,6 +371,7 @@ class Diagnosis:
             "self_blame": self.self_blame,
             "sync_resources": self.sync_resources,
             "issue_pressure": self.issue_pressure,
+            "advice": self.advice,
             "recommendations": [r.to_dict() for r in self.recommendations],
         })
         return out
@@ -365,16 +383,19 @@ class Diagnosis:
             raise ValueError(
                 f"Diagnosis schema_version {version} outside supported "
                 f"range [{MIN_SCHEMA_VERSION}, {SCHEMA_VERSION}]")
-        # Graceful migration: v1 payloads (pre-sync_resources) and v2
-        # payloads (pre-issue_pressure) read fine — a warm disk cache
-        # survives each schema bump with an explicit "not recorded"
-        # default instead of a reject.
+        # Graceful migration: v1 payloads (pre-sync_resources), v2
+        # payloads (pre-issue_pressure) and v3 payloads (pre-advice) read
+        # fine — a warm disk cache survives each schema bump with an
+        # explicit "not recorded" default instead of a reject.
         sync_resources = data.get("sync_resources")
         if sync_resources is None:
             sync_resources = dict(SYNC_RESOURCES_NOT_RECORDED)
         issue_pressure = data.get("issue_pressure")
         if issue_pressure is None:
             issue_pressure = dict(ISSUE_PRESSURE_NOT_RECORDED)
+        advice = data.get("advice")
+        if advice is None:
+            advice = dict(ADVICE_NOT_RECORDED)
         cov = data.get("single_dependency_coverage", {})
         return cls(
             backend=data["backend"],
@@ -394,6 +415,7 @@ class Diagnosis:
             stall_taxonomy=data.get("stall_taxonomy"),
             sync_resources=sync_resources,
             issue_pressure=issue_pressure,
+            advice=advice,
             schema_version=SCHEMA_VERSION,
         )
 
@@ -468,6 +490,25 @@ class Diagnosis:
                 f"{b['cycles']:,.0f} cycles)")
         return lines
 
+    def _advice_lines(self, top_k: int = 5) -> List[str]:
+        """Human-readable ranked-advice lines ("1.32x batch bar.sync …")
+        shared by the markdown and LLM views; empty when not recorded."""
+        adv = self.advice or {}
+        if not adv.get("recorded"):
+            return []
+        lines: List[str] = []
+        for item in adv.get("items", [])[:top_k]:
+            mut = item.get("mutation", {})
+            mut_bits = ", ".join(f"{k}={v}" for k, v in mut.items()
+                                 if k != "kind" and v is not None)
+            lines.append(
+                f"**{item.get('modeled_speedup', 0.0):.2f}x modeled** "
+                f"[{item.get('rule', '?')}] {item.get('description', '')} "
+                f"(what-if: {mut.get('kind', '?')}"
+                + (f" {mut_bits}" if mut_bits else "")
+                + f"; confidence {item.get('confidence', 0.0):.2f})")
+        return lines
+
     def to_markdown(self) -> str:
         """Human-readable report (the profiler-UI rendering)."""
         lines = [
@@ -504,6 +545,10 @@ class Diagnosis:
         if issue_lines:
             lines += ["", "## Issue-queue contention", ""]
             lines += [f"- {l}" for l in issue_lines]
+        advice_lines = self._advice_lines()
+        if advice_lines:
+            lines += ["", "## Optimization advice (what-if replayed)", ""]
+            lines += [f"- {l}" for l in advice_lines]
         if self.recommendations:
             lines += ["", "## Recommendations", ""]
             for r in self.recommendations:
@@ -512,7 +557,8 @@ class Diagnosis:
         return "\n".join(lines) + "\n"
 
     def to_llm_context(self, level: str, code: str = "") -> str:
-        """§IV diagnostic-context payloads (C / C+S / C+L(S))."""
+        """§IV diagnostic-context payloads (C / C+S / C+L(S) / C+L(S,A)
+        — the last appends the ranked what-if-replayed advice)."""
         if level == "C":
             return _context_c(code)
         if level == "C+S":
@@ -524,7 +570,7 @@ class Diagnosis:
                              f"{s['latency_samples']:,.0f} stall cycles "
                              f"({brk})")
             return "\n".join(lines) + "\n"
-        if level == "C+L(S)":
+        if level in ("C+L(S)", "C+L(S,A)"):
             lines = [_context_c(code), "### LEO root-cause analysis"]
             lines.append(f"Estimated step time: "
                          f"{self.estimated_step_seconds*1e3:.3f} ms on "
@@ -548,6 +594,15 @@ class Diagnosis:
                 lines.append(f"- [{r.action}] {r.reason} "
                              f"(~{r.est_cycles:,.0f} cycles at `{r.target}`"
                              f"{', scope ' + r.scope if r.scope else ''})")
+            if level == "C+L(S,A)":
+                advice_lines = self._advice_lines()
+                lines.append("#### Ranked optimization advice "
+                             "(what-if replayed)")
+                if advice_lines:
+                    lines += [f"- {l}" for l in advice_lines]
+                else:
+                    lines.append("- (advice not recorded: the request did "
+                                 "not run the advisor)")
             return "\n".join(lines) + "\n"
         raise ValueError(f"unknown context level {level!r}")
 

@@ -54,7 +54,10 @@ from .session import LeoSession, ModuleLike, SessionStats
 #: across the backend's issue queues (per-queue sync scoreboards,
 #: NOT_SELECTED/PIPE_BUSY contention), changing stall profiles and
 #: makespans for every multi-queue backend.
-DIAGNOSIS_KEY_VERSION = 3
+#: v4: the optional advisor (what-if replay) rides the diagnosis; the
+#: `advise` knob joins the key list so advice-carrying artifacts never
+#: answer advice-free requests (or vice versa).
+DIAGNOSIS_KEY_VERSION = 4
 
 
 @dataclass
@@ -73,6 +76,7 @@ class AnalyzeRequest:
     hints: Optional[Dict[str, Any]] = None
     n_chains: int = 5
     prune_unexecuted: bool = True
+    advise: bool = False
     request_id: Optional[str] = None
     schema_version: int = SCHEMA_VERSION
 
@@ -98,6 +102,7 @@ class AnalyzeRequest:
             "hints": self.hints,
             "n_chains": self.n_chains,
             "prune_unexecuted": self.prune_unexecuted,
+            "advise": self.advise,
             "request_id": self.request_id,
         }
 
@@ -110,6 +115,7 @@ class AnalyzeRequest:
             hints=data.get("hints"),
             n_chains=data.get("n_chains", 5),
             prune_unexecuted=data.get("prune_unexecuted", True),
+            advise=data.get("advise", False),
             request_id=data.get("request_id"),
             schema_version=data.get("schema_version", 0),
         )
@@ -169,7 +175,7 @@ class LeoService:
         # hot path allocation- and branch-cheap.
         self.metrics = metrics
         self._m_diagnoses = self._m_cache = None
-        self._m_parse = self._m_pipeline = None
+        self._m_parse = self._m_pipeline = self._m_advisor = None
         if metrics is not None:
             self._m_diagnoses = metrics.counter(
                 "leo_diagnoses_total",
@@ -185,6 +191,9 @@ class LeoService:
             self._m_pipeline = metrics.histogram(
                 "leo_pipeline_seconds",
                 "Full analysis pipeline latency on diagnosis misses.")
+            self._m_advisor = metrics.histogram(
+                "leo_advisor_seconds",
+                "What-if advisor latency on advise=True diagnosis misses.")
             g = metrics.gauge(
                 "leo_session_cache_hits",
                 "Session single-flight cache hit counters, per op.",
@@ -300,7 +309,8 @@ class LeoService:
 
     def _diagnosis_key(self, program: ModuleLike, backend: Any,
                        hints: Optional[dict], n_chains: int,
-                       prune_unexecuted: bool) -> Optional[str]:
+                       prune_unexecuted: bool,
+                       advise: bool = False) -> Optional[str]:
         """Content key for a diagnosis; None for identity-keyed Modules
         (not content-hashable, so never disk-cached).
 
@@ -324,7 +334,7 @@ class LeoService:
                            backend.sync))
         h = hashlib.sha256()
         h.update(json.dumps([
-            mkey, backend_fp, n_chains, prune_unexecuted,
+            mkey, backend_fp, n_chains, prune_unexecuted, advise,
             DIAGNOSIS_KEY_VERSION,
             self.session.pipeline.names,
         ]).encode())
@@ -334,14 +344,21 @@ class LeoService:
                  backend: Optional[BackendLike] = None,
                  hints: Optional[dict] = None,
                  n_chains: int = 5,
-                 prune_unexecuted: bool = True) -> Diagnosis:
+                 prune_unexecuted: bool = True,
+                 advise: bool = False) -> Diagnosis:
         """Analyze and return the serializable :class:`Diagnosis`,
         consulting the memory and disk diagnosis tiers first — a warm
-        disk tier answers without parsing or running the pipeline."""
+        disk tier answers without parsing or running the pipeline.
+
+        ``advise=True`` additionally runs the what-if advisor
+        (:mod:`repro.advisor`) on cache misses and lands ranked,
+        speedup-priced advice in the Diagnosis ``advice`` section
+        (schema v4); advice-carrying artifacts are cached under their
+        own key, so toggling the knob never serves a stale shape."""
         b = resolve_backend(backend) if backend is not None \
             else self.session.default_backend
         dkey = self._diagnosis_key(program, b, hints, n_chains,
-                                   prune_unexecuted)
+                                   prune_unexecuted, advise)
         # cached entries are returned as copies: a caller mutating its
         # Diagnosis (e.g. inserting a pipeline-level recommendation, as
         # benchmarks/harness.py does) must not poison the shared cache
@@ -385,6 +402,17 @@ class LeoService:
         if self._m_pipeline is not None:
             self._m_pipeline.observe(time.monotonic() - t0)
         diag = Diagnosis.from_analysis(analysis, max_chains=n_chains)
+        if advise:
+            # lazy: repro.advisor imports core, so core must not import
+            # it at module scope (and advice-free serving never pays it)
+            from ..advisor import Advisor, advice_section
+            t1 = time.monotonic()
+            rep = Advisor().report(
+                analysis.module, b,
+                profile=analysis.profile, blame=analysis.blame)
+            if self._m_advisor is not None:
+                self._m_advisor.observe(time.monotonic() - t1)
+            diag.advice = advice_section(rep.advice, rep)
         if dkey is not None:
             with self._lock:
                 self._diagnoses[dkey] = diag.copy()
@@ -403,11 +431,13 @@ class LeoService:
             return self.diagnose_fanout(
                 request.hlo_text, backends=request.backends,
                 hints=request.hints, n_chains=request.n_chains,
-                prune_unexecuted=request.prune_unexecuted)
+                prune_unexecuted=request.prune_unexecuted,
+                advise=request.advise)
         return self.diagnose(
             request.hlo_text, backend=request.backend, hints=request.hints,
             n_chains=request.n_chains,
-            prune_unexecuted=request.prune_unexecuted)
+            prune_unexecuted=request.prune_unexecuted,
+            advise=request.advise)
 
     def submit_async(self, request: AnalyzeRequest) -> Future:
         """`submit` as a Future — the non-blocking shape a queue-driven

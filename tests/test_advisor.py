@@ -1,0 +1,512 @@
+"""Tests for ``repro.advisor`` — the what-if replay engine, the rule
+catalog, the ranked advisor, the Diagnosis schema-v4 wiring, and the
+advisor-guided hillclimb (PR-7 ISSUE acceptance):
+
+* the ``Identity`` mutation replays byte-identically to baseline on every
+  pre-existing golden lane (3 fixtures x {native, single-stream} x all 6
+  golden backends) — fingerprint equality, not approx;
+* growing a sync pool's capacity never *increases* modeled sync_resource
+  stall cycles (hypothesis property across backends/pools/sizes);
+* ``Diagnosis.from_json(to_json(d)) == d`` holds at v4 with recorded
+  advice (hypothesis property);
+* the advisor-guided search reaches the blind search's best objective in
+  <= half the evaluations on the copy-storm workload (fixed seed).
+"""
+import json
+
+import pytest
+
+from conftest import ASYNC_HLO, COPYSTORM_HLO
+from repro.advisor import (
+    Advice,
+    Advisor,
+    CoalesceSyncTags,
+    Evidence,
+    Identity,
+    PipelineAsyncChain,
+    RelaxSyncEdge,
+    ResizePool,
+    RULES,
+    ScaleLatency,
+    SetIssue,
+    TreeReduceChain,
+    WhatIfEngine,
+    advice_section,
+    match_rules,
+    mutation_from_dict,
+    profile_fingerprint,
+    rule_by_name,
+    sync_resource_stall_cycles,
+)
+from repro.core import (
+    SINGLE_ISSUE,
+    AnalyzeRequest,
+    Diagnosis,
+    LeoService,
+    get_backend,
+    parse_hlo,
+)
+
+GOLDEN_BACKENDS = ("amd_mi300a", "intel_pvc", "nvidia_gh200",
+                   "tpu_v4", "tpu_v5e", "tpu_v5p")
+
+GPU_VENDOR_BACKENDS = ("nvidia_gh200", "amd_mi300a", "intel_pvc")
+
+
+def _wide_hlo() -> str:
+    from repro.launch.analysis_server import wide_ops_hlo
+    return wide_ops_hlo()
+
+
+def _storm_hlo(n: int) -> str:
+    from repro.launch.analysis_server import copy_storm_hlo
+    return copy_storm_hlo(n)
+
+
+_FIXTURES = {
+    "async": ASYNC_HLO,
+    "copystorm": COPYSTORM_HLO,
+}
+
+
+@pytest.fixture(scope="module")
+def modules():
+    """fixture-name -> parsed Module (parsed once per test module)."""
+    fixtures = dict(_FIXTURES, wide=_wide_hlo())
+    return {name: parse_hlo(text) for name, text in fixtures.items()}
+
+
+def _variant(backend_name: str, variant: str):
+    b = get_backend(backend_name)
+    if variant == "single_stream":
+        return b.with_issue(SINGLE_ISSUE, name=f"{backend_name}@single")
+    return b
+
+
+# --------------------------------------------------------------------------
+# Identity replay: byte-identical on every pre-existing golden lane.
+# --------------------------------------------------------------------------
+
+class TestIdentityReplay:
+    """ISSUE acceptance: the identity what-if replay is byte-identical to
+    the baseline StallProfile on all pre-existing golden lanes (the same
+    3 fixtures x 2 issue variants x 6 backends that
+    tests/goldens/backend_divergence.json pins)."""
+
+    @pytest.mark.parametrize("backend", GOLDEN_BACKENDS)
+    @pytest.mark.parametrize("variant", ("native", "single_stream"))
+    @pytest.mark.parametrize("fixture", ("async", "copystorm", "wide"))
+    def test_identity_is_byte_identical(self, modules, fixture, variant,
+                                        backend):
+        engine = WhatIfEngine(modules[fixture], _variant(backend, variant))
+        res = engine.replay(Identity())
+        assert profile_fingerprint(res.profile) == \
+            profile_fingerprint(engine.baseline())
+        assert res.modeled_speedup == 1.0
+        assert res.delta_cycles == 0.0
+
+    def test_replay_never_mutates_the_inputs(self, modules):
+        module = modules["copystorm"]
+        backend = get_backend("nvidia_gh200")
+        before = profile_fingerprint(
+            WhatIfEngine(module, backend).baseline())
+        engine = WhatIfEngine(module, backend)
+        for mutation in (CoalesceSyncTags(group=4),
+                         PipelineAsyncChain(window=2),
+                         TreeReduceChain(),
+                         RelaxSyncEdge(match="copy"),
+                         ResizePool(pool="named_barrier", capacity=12),
+                         SetIssue(queues=1, width=1),
+                         ScaleLatency(hw_field="hbm_bw", factor=2.0)):
+            engine.replay(mutation)
+        after = profile_fingerprint(
+            WhatIfEngine(module, backend).baseline())
+        assert before == after
+
+
+# --------------------------------------------------------------------------
+# Mutation semantics.
+# --------------------------------------------------------------------------
+
+class TestMutations:
+    def test_resize_pool_grow_and_shrink(self):
+        b = get_backend("nvidia_gh200")
+        grown = ResizePool(pool="named_barrier", capacity=9).apply_backend(b)
+        pool = next(p for p in grown.sync.pools if p.name == "named_barrier")
+        assert pool.capacity == 9
+        assert len(set(pool.instances)) == 9
+        shrunk = ResizePool(pool="named_barrier",
+                            capacity=2).apply_backend(b)
+        pool = next(p for p in shrunk.sync.pools
+                    if p.name == "named_barrier")
+        assert pool.capacity == 2
+        # originals untouched; mutant renamed so caches cannot alias it
+        assert next(p for p in b.sync.pools
+                    if p.name == "named_barrier").capacity == 6
+        assert grown.name != b.name and "~" in grown.name
+
+    def test_resize_pool_unknown_pool_raises(self):
+        with pytest.raises(KeyError, match="no sync pool"):
+            ResizePool(pool="nope", capacity=2).apply_backend(
+                get_backend("nvidia_gh200"))
+
+    def test_scale_latency_validates_field(self):
+        b = get_backend("amd_mi300a")
+        with pytest.raises(KeyError, match="scalable"):
+            ScaleLatency(hw_field="clock_hz", factor=2.0).apply_backend(b)
+        doubled = ScaleLatency(hw_field="hbm_bw", factor=2.0).apply_backend(b)
+        assert doubled.hw.hbm_bw == pytest.approx(2 * b.hw.hbm_bw)
+
+    def test_set_issue_inherits_unset_knobs(self):
+        b = get_backend("intel_pvc")
+        m = SetIssue(width=4).apply_backend(b)
+        assert m.issue.width == 4
+        assert m.issue.queues == b.issue.queues
+        assert m.issue.policy == b.issue.policy
+
+    def test_coalesce_groups_tags_without_touching_data_deps(self, modules):
+        module = modules["copystorm"]
+        mutated = CoalesceSyncTags(group=4).apply_module(module)
+        orig = module.entry_computation
+        new = mutated.entry_computation
+        assert [i.name for i in orig.instructions] == \
+            [i.name for i in new.instructions]
+        assert [i.operands for i in orig.instructions] == \
+            [i.operands for i in new.instructions]
+        # 8 starts sharing tags in groups of 4 -> 2 distinct live tags
+        tags = {t for i in new.instructions for t in i.sync.sets
+                if i.sync.sets}
+        orig_tags = {t for i in orig.instructions for t in i.sync.sets
+                     if i.sync.sets}
+        assert len(tags) == 2 and len(orig_tags) == 8
+
+    def test_tree_reduce_preserves_names_and_root(self):
+        # a serial 7-add chain over 8 leaves
+        lines = ["HloModule chain", "", "ENTRY %main (p0: f32[64]) -> f32[64] {"]
+        for i in range(8):
+            lines.append(f"  %l{i} = f32[64] parameter({i})")
+        lines.append("  %c0 = f32[64] add(%l0, %l1)")
+        for i in range(1, 7):
+            lines.append(f"  %c{i} = f32[64] add(%c{i-1}, %l{i+1})")
+        lines.append("  ROOT %out = f32[64] multiply(%c6, %c6)")
+        lines.append("}")
+        module = parse_hlo("\n".join(lines))
+        mutated = TreeReduceChain(min_length=4).apply_module(module)
+        comp = mutated.entry_computation
+        assert [i.name for i in comp.instructions] == \
+            [i.name for i in module.entry_computation.instructions]
+        # the tail still computes the root and consumes two prior adds
+        tail = comp.get("c6")
+        assert set(tail.operands) <= {f"c{i}" for i in range(6)}
+        # depth shrinks from 7 serial levels to ceil(log2(8)) = 3
+        def depth(name):
+            instr = comp.get(name)
+            if instr is None or instr.opcode != "add":
+                return 0
+            return 1 + max(depth(op) for op in instr.operands)
+        assert depth("c6") == 3
+
+    def test_mutation_dict_round_trip(self):
+        for mutation in (Identity(),
+                         ResizePool(pool="named_barrier", capacity=9),
+                         SetIssue(queues=2, width=4, policy="round_robin"),
+                         ScaleLatency(hw_field="hbm_bw", factor=2.0),
+                         CoalesceSyncTags(group=8),
+                         PipelineAsyncChain(window=2),
+                         TreeReduceChain(min_length=6),
+                         RelaxSyncEdge(match="copy")):
+            data = mutation.to_dict()
+            json.loads(json.dumps(data))    # JSON-pure
+            assert mutation_from_dict(data) == mutation
+        with pytest.raises(KeyError, match="unknown mutation kind"):
+            mutation_from_dict({"kind": "Warp9"})
+
+
+# --------------------------------------------------------------------------
+# Rules: evidence patterns match per vendor, phrased natively.
+# --------------------------------------------------------------------------
+
+class TestRules:
+    @pytest.fixture(scope="class")
+    def storm_evidence(self):
+        module = parse_hlo(_storm_hlo(48))
+        out = {}
+        for name in GPU_VENDOR_BACKENDS:
+            backend = get_backend(name)
+            profile = WhatIfEngine(module, backend).baseline()
+            out[name] = Evidence(backend=backend, profile=profile)
+        return out
+
+    def test_vendors_match_different_rules(self, storm_evidence):
+        matched = {name: [r.name for r in match_rules(ev)]
+                   for name, ev in storm_evidence.items()}
+        assert "batch_sync_allocations" in matched["nvidia_gh200"]
+        assert "coalesce_outstanding_waits" in matched["amd_mi300a"]
+        assert "expose_ilp_tree_reduce" in matched["intel_pvc"]
+        # Intel's SBIDs absorb the storm: no sync-contention rule fires
+        assert not any(r.startswith(("batch_", "coalesce_", "recycle_"))
+                       for r in matched["intel_pvc"])
+
+    def test_vendor_phrasing_is_native(self, storm_evidence):
+        rule = rule_by_name("batch_sync_allocations")
+        phrases = {name: rule.phrase(ev.backend)
+                   for name, ev in storm_evidence.items()}
+        assert "bar.sync" in phrases["nvidia_gh200"]
+        assert "s_barrier" in phrases["amd_mi300a"]
+        assert len(set(phrases.values())) == 3
+        waits = rule_by_name("coalesce_outstanding_waits")
+        assert "s_waitcnt" in waits.phrase(
+            storm_evidence["amd_mi300a"].backend)
+        sbids = rule_by_name("recycle_scoreboard_tokens")
+        assert "SBID" in sbids.phrase(storm_evidence["intel_pvc"].backend)
+
+    def test_evidence_lines_name_concrete_pressure(self, storm_evidence):
+        lines = storm_evidence["nvidia_gh200"].lines()
+        assert any("named_barrier" in ln and "evictions" in ln
+                   for ln in lines)
+
+    def test_rule_catalog_sanity(self):
+        names = [r.name for r in RULES]
+        assert len(names) == len(set(names))
+        assert all(0 < r.confidence <= 1 for r in RULES)
+        with pytest.raises(KeyError):
+            rule_by_name("nope")
+
+
+# --------------------------------------------------------------------------
+# Advisor ranking + the Diagnosis v4 advice section.
+# --------------------------------------------------------------------------
+
+class TestAdvisor:
+    @pytest.fixture(scope="class")
+    def storm_reports(self):
+        module = parse_hlo(_storm_hlo(48))
+        return {name: Advisor().report(module, get_backend(name))
+                for name in GPU_VENDOR_BACKENDS}
+
+    def test_advice_ranked_by_score(self, storm_reports):
+        for rep in storm_reports.values():
+            scores = [a.score for a in rep.advice]
+            assert scores == sorted(scores, reverse=True)
+            assert all(a.modeled_speedup > 1.0 for a in rep.advice)
+
+    def test_report_counts_replays(self, storm_reports):
+        rep = storm_reports["nvidia_gh200"]
+        assert rep.rules_matched >= 1
+        assert rep.candidates_replayed >= rep.rules_matched
+        assert rep.advisor_seconds > 0
+        assert rep.top is rep.advice[0]
+
+    def test_advice_round_trips(self, storm_reports):
+        top = storm_reports["amd_mi300a"].top
+        again = Advice.from_dict(json.loads(json.dumps(top.to_dict())))
+        assert again.rule == top.rule
+        assert again.to_mutation() == top.to_mutation()
+        assert again.score == pytest.approx(top.score)
+
+    def test_advice_section_shape(self, storm_reports):
+        rep = storm_reports["intel_pvc"]
+        section = advice_section(rep.advice, rep)
+        assert section["recorded"] is True
+        assert section["count"] == len(rep.advice)
+        assert section["rules_matched"] == rep.rules_matched
+        json.loads(json.dumps(section))     # JSON-pure
+
+    def test_profile_seeding_skips_baseline_rerun(self):
+        module = parse_hlo(_storm_hlo(8))
+        backend = get_backend("nvidia_gh200")
+        profile = WhatIfEngine(module, backend).baseline()
+        advisor = Advisor()
+        rep = advisor.report(module, backend, profile=profile)
+        # candidates_replayed counts ONLY candidate replays: the baseline
+        # came in from the pipeline and must not be re-paid
+        assert rep.candidates_replayed >= 1
+
+
+# --------------------------------------------------------------------------
+# Service wiring: diagnose(advise=True), caching, rendering, wire flag.
+# --------------------------------------------------------------------------
+
+class TestServiceAdvice:
+    @pytest.fixture(scope="class")
+    def svc(self):
+        return LeoService()
+
+    @pytest.fixture(scope="class")
+    def advised(self, svc):
+        return svc.diagnose(_storm_hlo(48), backend="nvidia_gh200",
+                            advise=True)
+
+    def test_advise_lands_in_schema_v4(self, advised):
+        assert advised.schema_version == 4
+        assert advised.advice["recorded"] is True
+        assert advised.advice["count"] >= 1
+        top = advised.advice["items"][0]
+        assert top["rule"] == "batch_sync_allocations"
+        assert top["modeled_speedup"] >= 1.2
+
+    def test_advise_false_keeps_not_recorded_default(self, svc, advised):
+        plain = svc.diagnose(_storm_hlo(48), backend="nvidia_gh200")
+        assert plain.advice["recorded"] is False
+        # ...and the two shapes are cached under DIFFERENT keys
+        again = svc.diagnose(_storm_hlo(48), backend="nvidia_gh200",
+                             advise=True)
+        assert again.advice == advised.advice
+
+    def test_request_flag_round_trips_and_submits(self, svc):
+        req = AnalyzeRequest(hlo_text=_storm_hlo(48), backend="amd_mi300a",
+                             advise=True)
+        again = AnalyzeRequest.from_json(req.to_json())
+        assert again.advise is True
+        diag = svc.submit(again)
+        assert diag.advice["recorded"] is True
+        assert diag.advice["items"][0]["rule"] == \
+            "coalesce_outstanding_waits"
+
+    def test_markdown_and_llm_context_render_advice(self, advised):
+        md = advised.to_markdown()
+        assert "Optimization advice (what-if replayed)" in md
+        assert "batch_sync_allocations" in md
+        ctx = advised.to_llm_context("C+L(S,A)")
+        assert "Ranked optimization advice" in ctx
+        assert "modeled" in ctx
+        # the advice-free context level still renders (advice omitted)
+        assert "Ranked optimization advice" not in \
+            advised.to_llm_context("C+L(S)")
+
+    def test_v4_json_round_trip_with_recorded_advice(self, advised):
+        assert Diagnosis.from_json(advised.to_json()) == advised
+
+    def test_advisor_metrics_observed(self):
+        from repro.serve.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        svc = LeoService(metrics=reg)
+        svc.diagnose(_storm_hlo(8), backend="nvidia_gh200", advise=True)
+        text = reg.render()
+        assert "leo_advisor_seconds_count 1" in text
+        svc.diagnose(_storm_hlo(8), backend="nvidia_gh200")
+        assert "leo_advisor_seconds_count 1" in reg.render()
+
+
+# --------------------------------------------------------------------------
+# Advisor-guided hillclimb (ISSUE acceptance: <= half the evaluations).
+# --------------------------------------------------------------------------
+
+class TestGuidedHillclimb:
+    SEED = 2
+    BUDGET = 16
+
+    @pytest.fixture(scope="class")
+    def searches(self):
+        from repro.launch.hillclimb import whatif_search
+        module = parse_hlo(_storm_hlo(48))
+        out = {}
+        for name in GPU_VENDOR_BACKENDS:
+            backend = get_backend(name)
+            blind = whatif_search(module, backend, mode="blind",
+                                  budget=self.BUDGET, seed=self.SEED)
+            guided = whatif_search(module, backend, mode="guided",
+                                   budget=self.BUDGET, seed=self.SEED,
+                                   target_speedup=blind["best_speedup"])
+            out[name] = (blind, guided)
+        return out
+
+    @pytest.mark.parametrize("backend", GPU_VENDOR_BACKENDS)
+    def test_guided_reaches_blind_best_in_half_the_evals(self, searches,
+                                                         backend):
+        blind, guided = searches[backend]
+        assert guided["best_speedup"] >= blind["best_speedup"]
+        assert guided["evaluations"] <= blind["evaluations"] / 2, \
+            (guided["evaluations"], blind["evaluations"])
+        # stronger: half of what blind needed just to FIND its best
+        assert guided["evaluations"] * 2 <= \
+            blind["evaluations_to_best"] + 1, \
+            (guided["evaluations"], blind["evaluations_to_best"])
+
+    def test_seeded_blind_search_is_reproducible(self):
+        from repro.launch.hillclimb import whatif_search
+        module = parse_hlo(_storm_hlo(8))
+        backend = get_backend("nvidia_gh200")
+        a = whatif_search(module, backend, mode="blind", budget=6, seed=7)
+        b = whatif_search(module, backend, mode="blind", budget=6, seed=7)
+        assert a["history"] == b["history"]
+        c = whatif_search(module, backend, mode="blind", budget=6, seed=8)
+        assert [h["mutation"] for h in c["history"]] != \
+            [h["mutation"] for h in a["history"]]
+
+    def test_mutation_space_covers_every_kind_family(self):
+        from repro.launch.hillclimb import mutation_space
+        kinds = {m.kind for m in mutation_space(get_backend("intel_pvc"))}
+        assert {"ResizePool", "CoalesceSyncTags", "PipelineAsyncChain",
+                "TreeReduceChain", "SetIssue", "ScaleLatency"} <= kinds
+
+
+# --------------------------------------------------------------------------
+# Hypothesis properties (ISSUE satellites).
+# --------------------------------------------------------------------------
+
+class TestProperties:
+    def test_identity_byte_identical_property(self):
+        hypothesis = pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (requirements-dev.txt)")
+        from hypothesis import given, settings, strategies as st
+
+        modules = {}
+
+        @settings(max_examples=12, deadline=None)
+        @given(backend=st.sampled_from(GOLDEN_BACKENDS),
+               n=st.integers(2, 12))
+        def prop(backend, n):
+            module = modules.setdefault(n, parse_hlo(_storm_hlo(n)))
+            engine = WhatIfEngine(module, get_backend(backend))
+            assert profile_fingerprint(engine.replay(Identity()).profile) \
+                == profile_fingerprint(engine.baseline())
+
+        prop()
+
+    def test_capacity_grow_never_increases_sync_stalls(self):
+        hypothesis = pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (requirements-dev.txt)")
+        from hypothesis import given, settings, strategies as st
+
+        modules = {}
+
+        @settings(max_examples=15, deadline=None)
+        @given(backend=st.sampled_from(GPU_VENDOR_BACKENDS),
+               n=st.integers(4, 16), extra=st.integers(1, 32),
+               pool_idx=st.integers(0, 3))
+        def prop(backend, n, extra, pool_idx):
+            b = get_backend(backend)
+            pools = b.sync.pools
+            pool = pools[pool_idx % len(pools)]
+            module = modules.setdefault(n, parse_hlo(_storm_hlo(n)))
+            engine = WhatIfEngine(module, b)
+            base = sync_resource_stall_cycles(engine.baseline())
+            grown = engine.replay(ResizePool(
+                pool=pool.name, capacity=pool.capacity + extra))
+            assert sync_resource_stall_cycles(grown.profile) <= base + 1e-9
+
+        prop()
+
+    def test_v4_diagnosis_round_trip_property(self):
+        hypothesis = pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (requirements-dev.txt)")
+        from hypothesis import given, settings, strategies as st
+
+        svc = LeoService()
+
+        @settings(max_examples=8, deadline=None)
+        @given(backend=st.sampled_from(GPU_VENDOR_BACKENDS),
+               n=st.sampled_from((4, 8, 12)),
+               advise=st.booleans(), n_chains=st.integers(1, 5))
+        def prop(backend, n, advise, n_chains):
+            diag = svc.diagnose(_storm_hlo(n), backend=backend,
+                                advise=advise, n_chains=n_chains)
+            assert diag.schema_version == 4
+            assert diag.advice["recorded"] is advise
+            assert Diagnosis.from_json(diag.to_json()) == diag
+
+        prop()

@@ -1,0 +1,156 @@
+"""Advice-divergence regression (the PR-7 ISSUE golden).
+
+The paper's case study 1: the *same* 48-copy async storm wants a
+*different* fix per vendor, and LEO's advisor must say so — with the
+what-if replay backing each claim with a modeled speedup:
+
+* **NVIDIA-class** — 6 device-shared named barriers oversubscribed:
+  batch synchronization points (``batch_sync_allocations``, phrased as
+  batched ``bar.sync``);
+* **AMD-class** — 2 per-wave waitcnt counters oversubscribed: coalesce
+  counter-style waits (``coalesce_outstanding_waits``, phrased as
+  ``s_waitcnt`` on groups);
+* **Intel-class** — 16 SBIDs absorb the storm without contention; the
+  bottleneck is issue-side (``expose_ilp_tree_reduce``: restructure the
+  serial reduction so the 8x2 fabric co-issues).
+
+Pinned in ``tests/goldens/advice_divergence.json``: the top rule, its
+priced mutation, the modeled speedup, and the vendor phrasing for every
+golden backend.  Any drift in the rule matchers, mutation semantics, the
+replay engine, or a vendor's sync/issue constants shows up as a precise
+per-backend diff.
+
+Regenerate after an intentional recalibration (the CI golden-drift gate
+runs exactly this and fails on an uncommitted diff):
+
+  PYTHONPATH=src python tests/test_advisor_divergence.py
+"""
+import json
+import os
+
+import pytest
+
+from repro.advisor import Advisor, Identity, WhatIfEngine, profile_fingerprint
+from repro.core import get_backend, parse_hlo
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "advice_divergence.json")
+
+GOLDEN_BACKENDS = ("amd_mi300a", "intel_pvc", "nvidia_gh200",
+                   "tpu_v4", "tpu_v5e", "tpu_v5p")
+
+#: The vendors the paper's case study contrasts; each must get a
+#: *different* top rule and a >= 1.2x modeled speedup on this workload.
+DIVERGING_VENDORS = ("nvidia_gh200", "amd_mi300a", "intel_pvc")
+
+#: The fixture: 48 concurrent async copies feeding one serial reduction —
+#: oversubscribes NVIDIA's 6 barriers and AMD's 2 waitcnt counters while
+#: Intel's 16 SBIDs stay uncontended (the workload of the ISSUE golden).
+N_COPIES = 48
+
+
+def _load_goldens() -> dict:
+    if not os.path.exists(GOLDEN_PATH):
+        return {}
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+GOLDENS = _load_goldens()
+
+
+def _storm_module():
+    from repro.launch.analysis_server import copy_storm_hlo
+    return parse_hlo(copy_storm_hlo(N_COPIES))
+
+
+def _snapshot(report) -> dict:
+    top = report.top
+    return {
+        "rules_matched": report.rules_matched,
+        "candidates_replayed": report.candidates_replayed,
+        "advice_rules": [a.rule for a in report.advice],
+        "top_rule": top.rule if top else None,
+        "top_mutation": dict(top.mutation) if top else None,
+        "top_speedup": top.modeled_speedup if top else 1.0,
+        "top_confidence": top.confidence if top else None,
+        "top_description": top.description if top else None,
+    }
+
+
+@pytest.fixture(scope="module")
+def reports():
+    module = _storm_module()
+    return {name: Advisor().report(module, get_backend(name))
+            for name in GOLDEN_BACKENDS}
+
+
+class TestAdviceDivergenceRegression:
+    def test_golden_file_covers_every_backend(self):
+        assert sorted(k for k in GOLDENS if not k.startswith("_")) == \
+            sorted(GOLDEN_BACKENDS)
+
+    @pytest.mark.parametrize("backend", sorted(GOLDEN_BACKENDS))
+    def test_backend_snapshot(self, reports, backend):
+        got, want = _snapshot(reports[backend]), dict(GOLDENS[backend])
+        assert got.pop("top_speedup") == \
+            pytest.approx(want.pop("top_speedup"), rel=1e-9)
+        assert got == want
+
+    def test_three_vendors_get_three_different_top_rules(self, reports):
+        """ISSUE acceptance: the advice-divergence golden pins *different*
+        top rules on NVIDIA vs AMD vs Intel for the same program."""
+        tops = {b: reports[b].top.rule for b in DIVERGING_VENDORS}
+        assert len(set(tops.values())) == 3, tops
+        assert tops["nvidia_gh200"] == "batch_sync_allocations"
+        assert tops["amd_mi300a"] == "coalesce_outstanding_waits"
+        assert tops["intel_pvc"] == "expose_ilp_tree_reduce"
+
+    @pytest.mark.parametrize("backend", DIVERGING_VENDORS)
+    def test_top_mutation_speeds_up_the_blamed_vendor(self, reports,
+                                                      backend):
+        """ISSUE acceptance: the top advice is priced at >= 1.2x modeled
+        speedup on every blamed vendor."""
+        assert reports[backend].top.modeled_speedup >= 1.2
+
+    def test_phrasing_is_vendor_native(self, reports):
+        assert "bar.sync" in reports["nvidia_gh200"].top.description
+        assert "s_waitcnt" in reports["amd_mi300a"].top.description
+        assert "SBID" in reports["intel_pvc"].top.description
+
+    @pytest.mark.parametrize("backend", sorted(GOLDEN_BACKENDS))
+    def test_identity_replay_matches_baseline(self, backend):
+        """The golden's precondition: replaying the null mutation on the
+        golden workload is byte-identical to the baseline profile."""
+        engine = WhatIfEngine(_storm_module(), get_backend(backend))
+        assert profile_fingerprint(engine.replay(Identity()).profile) == \
+            profile_fingerprint(engine.baseline())
+
+
+def regenerate() -> dict:
+    """Recompute the golden (recalibration/drift-gate entry point);
+    writes ``tests/goldens/advice_divergence.json`` in place."""
+    module = _storm_module()
+    goldens = {
+        "_comment": "Advice-divergence golden (48-copy storm, one serial "
+                    "reduction); regenerate with `PYTHONPATH=src python "
+                    "tests/test_advisor_divergence.py` after an "
+                    "intentional recalibration (the CI golden-drift gate "
+                    "runs exactly that and fails on an uncommitted diff).",
+    }
+    for name in sorted(GOLDEN_BACKENDS):
+        goldens[name] = _snapshot(Advisor().report(module,
+                                                   get_backend(name)))
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(goldens, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return goldens
+
+
+if __name__ == "__main__":
+    regenerated = regenerate()
+    for name in sorted(k for k in regenerated if not k.startswith("_")):
+        snap = regenerated[name]
+        print(f"{name}: top={snap['top_rule']} "
+              f"({snap['top_speedup']:.3f}x)")
+    print(f"wrote {GOLDEN_PATH}")

@@ -15,6 +15,7 @@ import time
 import pytest
 
 from repro.core.report import (
+    ADVICE_NOT_RECORDED,
     ISSUE_PRESSURE_NOT_RECORDED,
     SCHEMA_VERSION,
     Diagnosis,
@@ -264,6 +265,38 @@ class TestCrossVersion:
         v2_by_hand["schema_version"] = 2
         assert migrated.to_json() == \
             Diagnosis.from_dict(v2_by_hand).to_json()
+
+    def test_v3_client_against_v4_server(self, async_hlo_text):
+        """PR-7 ISSUE acceptance: a v3-era client asking a v4 server for
+        advice-bearing diagnoses gets a genuine v3 payload (the ``advice``
+        section is dropped on the wire), and migrating it forward equals
+        the hand-built v3 migration fixture recipe."""
+        svc = LeoService()
+        with LeoHttpd(service=svc, port=0, slots=2) as app:
+            with LeoClient(port=app.port, accept_schema=3) as client:
+                resp = client.submit_wire(AnalyzeRequest(
+                    hlo_text=async_hlo_text, backend="tpu_v5e",
+                    advise=True))
+            inproc = svc.submit(AnalyzeRequest(hlo_text=async_hlo_text,
+                                               backend="tpu_v5e",
+                                               advise=True))
+        assert inproc.advice["recorded"] is True
+        assert resp.schema_version == 3
+        # a genuine v3 payload on the wire: the v4-only section is gone
+        assert "advice" not in resp.payload
+        assert "issue_pressure" in resp.payload
+        assert resp.payload["schema_version"] == 3
+        migrated = resp.result()
+        assert migrated.schema_version == SCHEMA_VERSION
+        assert migrated.advice == ADVICE_NOT_RECORDED
+        assert migrated.issue_pressure == inproc.issue_pressure
+        # identical to migrating the same v3 payload built by hand from
+        # the in-process diagnosis (the test_syncmodel fixture recipe)
+        v3_by_hand = inproc.to_dict()
+        del v3_by_hand["advice"]
+        v3_by_hand["schema_version"] = 3
+        assert migrated.to_json() == \
+            Diagnosis.from_dict(v3_by_hand).to_json()
 
     def test_future_client_negotiates_down(self, async_hlo_text):
         """A newer-generation client (accept_schema > server's) just gets

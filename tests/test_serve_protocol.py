@@ -5,6 +5,7 @@ import json
 import pytest
 
 from repro.core.report import (
+    ADVICE_NOT_RECORDED,
     ISSUE_PRESSURE_NOT_RECORDED,
     MIN_SCHEMA_VERSION,
     SCHEMA_VERSION,
@@ -114,14 +115,20 @@ class TestSchemaNegotiation:
 
     def test_downgrade_drops_newer_sections(self, diagnosis):
         full = diagnosis.to_dict()
+        v3 = downgrade_diagnosis_dict(full, 3)
+        assert v3["schema_version"] == 3
+        assert "advice" not in v3
+        assert "issue_pressure" in v3
         v2 = downgrade_diagnosis_dict(full, 2)
         assert v2["schema_version"] == 2
+        assert "advice" not in v2
         assert "issue_pressure" not in v2
         assert "sync_resources" in v2
         v1 = downgrade_diagnosis_dict(full, 1)
         assert "issue_pressure" not in v1
         assert "sync_resources" not in v1
         # the input is never mutated
+        assert "advice" in full
         assert "issue_pressure" in full
         assert full["schema_version"] == SCHEMA_VERSION
 
@@ -129,9 +136,15 @@ class TestSchemaNegotiation:
         """The wire downgrade and the reader's from_dict migration are
         exact inverses up to the explicit 'not recorded' defaults —
         the same contract the disk cache already honors."""
+        v3 = downgrade_diagnosis_dict(diagnosis.to_dict(), 3)
+        migrated = Diagnosis.from_dict(v3)
+        assert migrated.schema_version == SCHEMA_VERSION
+        assert migrated.advice == ADVICE_NOT_RECORDED
+        assert migrated.issue_pressure == diagnosis.issue_pressure
         v2 = downgrade_diagnosis_dict(diagnosis.to_dict(), 2)
         migrated = Diagnosis.from_dict(v2)
         assert migrated.schema_version == SCHEMA_VERSION
+        assert migrated.advice == ADVICE_NOT_RECORDED
         assert migrated.issue_pressure == ISSUE_PRESSURE_NOT_RECORDED
         assert migrated.sync_resources == diagnosis.sync_resources
         v1 = downgrade_diagnosis_dict(diagnosis.to_dict(), 1)

@@ -6,6 +6,7 @@ import json
 import pytest
 
 from repro.core import (
+    ADVICE_NOT_RECORDED,
     AnalyzeRequest,
     Diagnosis,
     LeoService,
@@ -136,6 +137,13 @@ class TestDiagnosis:
             stall_taxonomy=st.one_of(st.none(),
                                      st.dictionaries(text, text,
                                                      max_size=3)),
+            # v4: both the migration default and recorded advice shapes
+            advice=st.one_of(
+                st.just(dict(ADVICE_NOT_RECORDED)),
+                st.fixed_dictionaries({"recorded": st.just(True),
+                                       "count": st.integers(0, 3),
+                                       "items": st.lists(jsonish,
+                                                         max_size=3)})),
             schema_version=st.just(SCHEMA_VERSION),
         )
 
