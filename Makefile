@@ -16,16 +16,26 @@
 #                       cross-vendor blame divergence and the wide-ops
 #                       issue-contention divergence)
 #   make bench-smoke  — the perf-trajectory lane: trimmed deterministic
-#                       benchmark subset; emits BENCH_pr7.json and fails
-#                       on >10% geomean-step-time regression vs the
-#                       committed benchmarks/baseline.json, or on the
-#                       advisor overhead gate (advise=True must stay
-#                       under 3x the plain pipeline per GPU backend)
+#                       benchmark subset; emits BENCH_pr8.json, appends
+#                       the run's geomeans to the committed
+#                       benchmarks/trajectory.json, and fails on >10%
+#                       geomean-step-time regression vs the committed
+#                       benchmarks/baseline.json, on the advisor
+#                       overhead gate (advise=True < 3x the plain
+#                       pipeline per GPU backend), or on the rewrite
+#                       overhead gate (rewrite=True < 4x)
 #   make advisor-smoke— the what-if advisor lane: the advisor demo's
 #                       three acts (identity replay, replay-priced
 #                       advice, guided-vs-blind search) plus the advisor
 #                       unit tests and the advice-divergence golden
 #                       (also under the CI golden-drift gate)
+#   make rewrite-smoke— the advice-to-HLO rewrite lane: the rewrite
+#                       demo's three acts (printer round-trip + identity
+#                       fingerprints, per-vendor applied rewrites with
+#                       equivalence certificates, predicted-vs-realized
+#                       >= 80%) plus the rewrite unit tests and the
+#                       rewrite-divergence golden (also under the CI
+#                       golden-drift gate)
 #   make net-smoke    — the networked-serving lane: start `--serve` on an
 #                       ephemeral port with a 1-slot/1-deep queue, run the
 #                       client demo against it (which must observe a 429
@@ -39,7 +49,7 @@ PYTEST_FLAGS := -x -q
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 quick bench serve-smoke sync-smoke bench-smoke net-smoke \
-	advisor-smoke
+	advisor-smoke rewrite-smoke
 
 tier1:
 	$(PY) -m pytest $(PYTEST_FLAGS)
@@ -51,12 +61,17 @@ bench:
 	$(PY) -m benchmarks.run
 
 bench-smoke:
-	$(PY) -m benchmarks.bench_smoke --out BENCH_pr7.json
+	$(PY) -m benchmarks.bench_smoke --out BENCH_pr8.json
 
 advisor-smoke:
 	$(PY) examples/advisor_demo.py --smoke
 	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_advisor.py \
 		tests/test_advisor_divergence.py
+
+rewrite-smoke:
+	$(PY) examples/rewrite_demo.py --smoke
+	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_rewrite.py \
+		tests/test_rewrite_divergence.py
 
 sync-smoke:
 	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_syncmodel.py \

@@ -23,6 +23,15 @@ best-of-N cold runs, so the ratio compares the same parse + pipeline
 work and isolates the advisor's replay overhead — the one knob
 ``Advisor(max_candidates_per_rule=...)`` bounds.
 
+The PR-8 rewrite lane extends it: a fresh-cache ``diagnose(rewrite=
+True)`` — advisor + program rewrites + a full re-analysis of every
+rewritten text — must stay under 4x the plain pipeline per GPU backend.
+
+Each run also appends its geomeans to the committed
+``benchmarks/trajectory.json`` (keyed by the output artifact name, so
+re-running the same PR's lane replaces, never duplicates) — the
+cross-PR perf trajectory in one diffable file.
+
   PYTHONPATH=src python -m benchmarks.bench_smoke            # gate
   PYTHONPATH=src python -m benchmarks.bench_smoke --update-baseline
 """
@@ -37,7 +46,9 @@ import time
 from typing import Dict, List
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
-DEFAULT_OUTPUT = "BENCH_pr7.json"
+DEFAULT_TRAJECTORY = os.path.join(os.path.dirname(__file__),
+                                  "trajectory.json")
+DEFAULT_OUTPUT = "BENCH_pr8.json"
 DEFAULT_THRESHOLD = 0.10
 
 #: Advisor-lane gate: advise=True must cost < this multiple of the plain
@@ -45,6 +56,11 @@ DEFAULT_THRESHOLD = 0.10
 ADVISOR_GATE = 3.0
 ADVISOR_BACKENDS = ("nvidia_gh200", "amd_mi300a", "intel_pvc")
 ADVISOR_REPEATS = 3
+
+#: Rewrite-lane gate: rewrite=True (advisor + rewrites + re-analysis of
+#: every rewritten text) must cost < this multiple of the plain pipeline
+#: on the same cold cache (ISSUE PR-8 satellite).
+REWRITE_GATE = 4.0
 
 
 #: Table-IV workloads in the trimmed subset (one per family).
@@ -155,6 +171,80 @@ def advisor_lane() -> Dict[str, object]:
     }
 
 
+def rewrite_lane() -> Dict[str, object]:
+    """Time plain vs rewrite=True diagnosis on the 48-copy storm.
+
+    Same cold best-of-N protocol as :func:`advisor_lane`; the ratio
+    isolates advisor replays + rewrite application + the full
+    re-analysis of every rewritten text (the most expensive part — each
+    applied rewrite pays a second pipeline)."""
+    from repro.core import LeoService
+    from repro.launch.analysis_server import copy_storm_hlo
+
+    hlo = copy_storm_hlo(48)
+
+    def best_of(backend: str, rewrite: bool) -> float:
+        best = math.inf
+        for _ in range(ADVISOR_REPEATS):
+            service = LeoService()
+            t0 = time.perf_counter()
+            service.diagnose(hlo, backend=backend, rewrite=rewrite)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    per_backend = {}
+    for backend in ADVISOR_BACKENDS:
+        pipeline_s = best_of(backend, rewrite=False)
+        rewrite_s = best_of(backend, rewrite=True)
+        per_backend[backend] = {
+            "pipeline_seconds": pipeline_s,
+            "rewrite_seconds": rewrite_s,
+            "ratio": rewrite_s / pipeline_s,
+        }
+    return {
+        "workload": "copystorm_48",
+        "gate_ratio": REWRITE_GATE,
+        "repeats_best_of": ADVISOR_REPEATS,
+        "per_backend": per_backend,
+    }
+
+
+def rewrite_failures(lane: Dict[str, object]) -> List[str]:
+    failures = []
+    for backend, row in sorted(lane["per_backend"].items()):
+        if row["ratio"] >= lane["gate_ratio"]:
+            failures.append(
+                f"{backend}: rewrite=True diagnosis took "
+                f"{row['rewrite_seconds']:.4f}s = {row['ratio']:.2f}x the "
+                f"plain pipeline ({row['pipeline_seconds']:.4f}s); the "
+                f"rewrite lane gates at < {lane['gate_ratio']:.1f}x — is "
+                f"the loop re-analyzing more candidates than it applies?")
+    return failures
+
+
+def append_trajectory(result: Dict[str, object], output: str,
+                      path: str = DEFAULT_TRAJECTORY) -> Dict[str, object]:
+    """Append this run's geomeans to the committed trajectory file,
+    keyed by the output artifact name (re-running one PR's lane replaces
+    its own entry instead of growing the list)."""
+    trajectory: Dict[str, object] = {"schema": 1, "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            trajectory = json.load(f)
+    name = os.path.basename(output)
+    runs = [r for r in trajectory.get("runs", []) if r.get("name") != name]
+    runs.append({
+        "name": name,
+        "geomean_estimated_step_seconds":
+            dict(result["geomean_estimated_step_seconds"]),
+    })
+    trajectory["runs"] = runs
+    with open(path, "w") as f:
+        json.dump(trajectory, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return trajectory
+
+
 def advisor_failures(lane: Dict[str, object]) -> List[str]:
     failures = []
     for backend, row in sorted(lane["per_backend"].items()):
@@ -216,17 +306,23 @@ def main(argv=None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from this run "
                          "(intentional recalibration) instead of gating")
+    ap.add_argument("--trajectory", default=DEFAULT_TRAJECTORY,
+                    help="committed cross-PR trajectory JSON to append "
+                         "this run's geomeans to")
     args = ap.parse_args(argv)
 
     result = run_bench()
     result["advisor"] = advisor_lane()
+    result["rewrite"] = rewrite_lane()
     with open(args.output, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
         f.write("\n")
+    append_trajectory(result, args.output, args.trajectory)
     print(f"wrote {args.output} "
           f"({len(result['backends'])} backends x "
           f"{len(result['workloads'])} workloads in "
-          f"{result['wall_seconds_informational']:.2f}s)")
+          f"{result['wall_seconds_informational']:.2f}s); "
+          f"trajectory appended to {args.trajectory}")
     for backend, geo in result["geomean_estimated_step_seconds"].items():
         print(f"  {backend:<16s} geomean est. step {geo:.4e}s")
     adv = result["advisor"]
@@ -234,12 +330,23 @@ def main(argv=None) -> int:
         print(f"  {backend:<16s} advise=True {row['advise_seconds']:.4f}s "
               f"vs pipeline {row['pipeline_seconds']:.4f}s "
               f"({row['ratio']:.2f}x, gate <{adv['gate_ratio']:.0f}x)")
+    rw = result["rewrite"]
+    for backend, row in sorted(rw["per_backend"].items()):
+        print(f"  {backend:<16s} rewrite=True {row['rewrite_seconds']:.4f}s "
+              f"vs pipeline {row['pipeline_seconds']:.4f}s "
+              f"({row['ratio']:.2f}x, gate <{rw['gate_ratio']:.0f}x)")
 
     adv_failures = advisor_failures(adv)
     if adv_failures:
         print("ADVISOR OVERHEAD GATE failed:", file=sys.stderr)
         for msg in adv_failures:
             print(f"  {msg}", file=sys.stderr)
+    rw_failures = rewrite_failures(rw)
+    if rw_failures:
+        print("REWRITE OVERHEAD GATE failed:", file=sys.stderr)
+        for msg in rw_failures:
+            print(f"  {msg}", file=sys.stderr)
+    adv_failures = adv_failures + rw_failures
 
     if args.update_baseline:
         with open(args.baseline, "w") as f:
@@ -263,7 +370,8 @@ def main(argv=None) -> int:
         return 1
     print(f"perf gate OK: no backend >"
           f"{args.threshold * 100:.0f}% slower than baseline; advisor "
-          f"overhead < {adv['gate_ratio']:.0f}x on all "
+          f"overhead < {adv['gate_ratio']:.0f}x and rewrite overhead "
+          f"< {rw['gate_ratio']:.0f}x on all "
           f"{len(adv['per_backend'])} GPU backends")
     return 0
 

@@ -1,0 +1,136 @@
+"""Advice-to-HLO rewrite walkthrough (the PR-8 subsystem).
+
+The diagnose -> advise -> transform -> verify loop, closed, on the
+48-copy async storm — three acts:
+
+1. **Round-trip + identity** — the printer's guarantee in action:
+   ``parse(emit(m)) == m``, and the identity rewrite's re-analysis is
+   byte-identical to the baseline profile (the fingerprint anchor every
+   other rewrite is judged against).
+2. **A different applied rewrite per GPU vendor** — the same storm
+   lowers to *different* HLO text per backend: NVIDIA-class batches
+   barrier tags (``sync_tag`` coalescing), AMD-class falls back from
+   its hardware-only pool advice to software tag coalescing at the
+   waitcnt group size, Intel-class rebalances the serial reduction into
+   a log-depth tree.  Each rewrite ships a structural-equivalence
+   certificate.
+3. **Predicted vs realized** — every rewritten text is re-analyzed
+   through the full pipeline; the realized speedup must deliver >= 80%
+   of what the advisor's what-if replay predicted (it typically
+   delivers 100%+).
+
+  PYTHONPATH=src python examples/rewrite_demo.py            # full tour
+  PYTHONPATH=src python examples/rewrite_demo.py --smoke    # CI lane
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def roundtrip_act(hlo, module, backends) -> None:
+    from repro.advisor import Identity, WhatIfEngine, profile_fingerprint
+    from repro.core import get_backend, parse_hlo
+    from repro.core.sampler import VirtualSampler
+    from repro.rewrite import apply_rewrite, emit_hlo
+    print("--- act 1: round-trip + identity fingerprints ---")
+    assert parse_hlo(emit_hlo(module)) == module, \
+        "parse(emit(m)) != m on the storm fixture"
+    print(f"parse(emit(m)) == m on {sum(1 for _ in module.all_instructions())}"
+          f"-instruction storm module")
+    identity = apply_rewrite(module, Identity())
+    assert identity.hlo_text == hlo, "identity rewrite changed the text"
+    for name in backends:
+        b = get_backend(name)
+        base = profile_fingerprint(
+            WhatIfEngine(module, b).baseline())
+        re_analyzed = profile_fingerprint(
+            VirtualSampler(identity.module, b.hw, sync=b.sync).run())
+        assert re_analyzed == base, f"{name}: identity re-analysis diverged"
+        print(f"{name:<14s} identity rewrite re-analysis sha256 "
+              f"{base[:16]}… == baseline")
+    print()
+
+
+def divergence_act(hlo, backends, *, top_k) -> dict:
+    from repro.rewrite import RewriteLoop
+    print("--- act 2: a different applied rewrite per GPU vendor ---")
+    reports = {}
+    for name in backends:
+        reports[name] = RewriteLoop(top_k=top_k).run(hlo, name)
+    print(f"{'backend':<14s} {'source':<14s} applied rewrite "
+          f"(certificate)")
+    signatures = set()
+    for name, rep in reports.items():
+        best = rep.best
+        if best is None:
+            print(f"{name:<14s} (no applicable rewrite)")
+            continue
+        mut = best.mutation
+        bits = ", ".join(f"{k}={v}" for k, v in mut.items()
+                         if k not in ("kind", "parts") and v is not None)
+        sig = (mut.get("kind"), bits)
+        signatures.add(sig)
+        print(f"{name:<14s} {best.source:<14s} {mut.get('kind')}"
+              f"({bits}) [{best.certificate['declared']}]")
+        if best.refusal:
+            print(f"{'':<14s} {'':<14s} (original advice refused: "
+                  f"{best.refusal['code']} — "
+                  f"{best.refusal['mutation_kind']})")
+    if len(reports) >= 3:
+        assert len(signatures) >= 3, (
+            f"expected a distinct rewrite per GPU vendor, "
+            f"got {signatures}")
+    print()
+    return reports
+
+
+def verify_act(reports) -> None:
+    print("--- act 3: predicted vs realized (full re-analysis) ---")
+    print(f"{'backend':<14s} {'predicted':>9s} {'realized':>9s} "
+          f"{'fraction':>8s}")
+    for name, rep in reports.items():
+        for o in rep.outcomes:
+            print(f"{name:<14s} {o.predicted_speedup:>8.3f}x "
+                  f"{o.realized_speedup:>8.3f}x "
+                  f"{o.realized_fraction:>7.0%}")
+            assert o.realized_fraction >= 0.8, (
+                f"{name}/{o.rule}: realized only "
+                f"{o.realized_fraction:.0%} of the predicted gain")
+    print()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="trimmed CI lane: two GPU vendors, a 12-copy "
+                         "storm")
+    ap.add_argument("--copies", type=int, default=None,
+                    help="async copies in the storm fixture "
+                         "(default: 48 full / 12 smoke)")
+    ap.add_argument("--top-k", type=int, default=2,
+                    help="advice items the loop lowers per backend")
+    args = ap.parse_args(argv)
+
+    from repro.core import parse_hlo
+    from repro.launch.analysis_server import copy_storm_hlo
+
+    copies = args.copies or (12 if args.smoke else 48)
+    backends = ("nvidia_gh200", "intel_pvc") if args.smoke else \
+        ("nvidia_gh200", "amd_mi300a", "intel_pvc")
+    hlo = copy_storm_hlo(copies)
+    module = parse_hlo(hlo)
+    print(f"fixture: {copies}-copy async storm feeding one serial "
+          f"reduction; backends: {', '.join(backends)}\n")
+
+    roundtrip_act(hlo, module, backends)
+    reports = divergence_act(hlo, backends, top_k=args.top_k)
+    verify_act(reports)
+    print("rewrite demo OK: text round-trips, identity is byte-stable, "
+          "each vendor\ngets its own equivalence-checked rewrite, and "
+          "re-analysis realizes >= 80%\nof every predicted speedup.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

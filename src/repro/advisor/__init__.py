@@ -23,6 +23,7 @@ from .advisor import Advice, Advisor, AdvisorReport, advice_section
 from .rules import RULES, Evidence, Rule, match_rules, rule_by_name
 from .whatif import (
     CoalesceSyncTags,
+    Compose,
     Identity,
     Mutation,
     PipelineAsyncChain,
@@ -43,7 +44,7 @@ __all__ = [
     "RULES", "Evidence", "Rule", "match_rules", "rule_by_name",
     "Mutation", "Identity", "ResizePool", "SetIssue", "ScaleLatency",
     "CoalesceSyncTags", "PipelineAsyncChain", "RelaxSyncEdge",
-    "TreeReduceChain",
+    "TreeReduceChain", "Compose",
     "WhatIfEngine", "WhatIfResult", "mutation_from_dict",
     "profile_fingerprint", "sync_resource_stall_cycles",
 ]

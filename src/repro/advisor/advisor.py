@@ -24,7 +24,7 @@ from ..core.backends import Backend
 from ..core.isa import Module
 from ..core.sampler import StallProfile
 from .rules import RULES, Evidence, Rule, match_rules
-from .whatif import Mutation, WhatIfEngine, mutation_from_dict
+from .whatif import Compose, Mutation, WhatIfEngine, mutation_from_dict
 
 __all__ = ["Advice", "AdvisorReport", "Advisor", "advice_section"]
 
@@ -165,6 +165,70 @@ class Advisor:
                blame: Optional[object] = None) -> List[Advice]:
         return self.report(module, backend, profile=profile,
                            blame=blame).advice
+
+    def compose(self, module: Module, backend: Backend, *,
+                top_k: int = 2,
+                profile: Optional[StallProfile] = None,
+                blame: Optional[object] = None,
+                report: Optional[AdvisorReport] = None,
+                mutations: Optional[List[Mutation]] = None) -> AdvisorReport:
+        """Price the top-k advice *stacked* and rank the composed
+        candidate alongside the singles.
+
+        Stacked fixes do not add linearly (coalescing tags can erase the
+        serialization a pool resize would have bought), so the composed
+        :class:`~repro.advisor.whatif.Compose` gets exactly ONE joint
+        what-if replay through the fully-mutated world — never a sum of
+        per-part deltas.  Pass ``report`` to extend an advisor run you
+        already paid for, and ``mutations`` to stack an explicit list
+        (the rewrite loop does, with its applied program rewrites)
+        instead of the top-k advice mutations.  Returns a new
+        :class:`AdvisorReport`; the input ``report`` is not mutated."""
+        t0 = time.perf_counter()
+        if report is None:
+            report = self.report(module, backend, profile=profile,
+                                 blame=blame)
+        if mutations is not None:
+            parts = list(mutations)
+            stacked = [a for a in report.advice
+                       if any(a.mutation == p.to_dict() for p in parts)]
+        else:
+            stacked = report.advice[:top_k]
+            parts = [a.to_mutation() for a in stacked]
+        if len(parts) < 2:
+            # nothing to stack: composing 0-1 mutations is the single
+            return report
+        engine = WhatIfEngine(module, backend)
+        if profile is not None:
+            engine._baseline = profile
+        composed = Compose(parts=tuple(parts))
+        result = engine.replay(composed)
+        rule_name = "compose(" + "+".join(
+            a.rule for a in stacked) + ")" if stacked else "compose"
+        advice = list(report.advice)
+        if result.modeled_speedup >= self.min_speedup:
+            advice.append(Advice(
+                rule=rule_name,
+                mutation=composed.to_dict(),
+                description="stacked: " + "; ".join(
+                    p.describe() for p in parts),
+                modeled_speedup=result.modeled_speedup,
+                modeled_delta_cycles=result.delta_cycles,
+                confidence=min((a.confidence for a in stacked), default=0.5),
+                evidence=[f"joint replay of {len(parts)} stacked "
+                          f"mutations (one sampler run, not a sum of "
+                          f"per-part deltas)"],
+            ))
+        advice.sort(key=lambda a: (-a.score, a.rule))
+        return AdvisorReport(
+            backend=report.backend,
+            advice=advice,
+            baseline_makespan_cycles=report.baseline_makespan_cycles,
+            rules_matched=report.rules_matched,
+            candidates_replayed=report.candidates_replayed + engine.replays,
+            advisor_seconds=report.advisor_seconds
+            + (time.perf_counter() - t0),
+        )
 
 
 def advice_section(advice: List[Advice],

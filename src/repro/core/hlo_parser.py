@@ -44,6 +44,10 @@ _TRANSCENDENTAL = {
 
 _COMP_HEADER_RE = re.compile(
     r"^\s*(?P<entry>ENTRY\s+)?%?(?P<name>[^\s(]+)\s*\((?P<params>.*)\)\s*->")
+
+# frontend_attributes={sync_tag="..."}: the sync identifier override the
+# CoalesceSyncTags rewrite lowers to (see `_annotate_sync`).
+_SYNC_TAG_RE = re.compile(r'sync_tag="([^"]*)"')
 _INSTR_RE = re.compile(
     r"^\s*(?P<root>ROOT\s+)?%?(?P<name>[^\s=]+)\s*=\s*(?P<rest>.+)$")
 
@@ -468,19 +472,43 @@ class HloParser:
         "sets a barrier" named by itself; the matching ``*-done`` op "waits"
         on it.  Token-typed values (after-all / optimization-barrier and any
         op producing/consuming ``token[]``) are the Intel-SWSB analogue.
+
+        ``frontend_attributes={sync_tag="..."}`` overrides the identifier a
+        start op sets (and, transitively, what its waiters wait on): this is
+        the textual carrier for the advisor's ``CoalesceSyncTags`` rewrite —
+        several starts sharing one tag re-arm one physical sync instance
+        instead of allocating one each.  Without the attribute the identifier
+        is the op's own name, exactly as before.
         """
         for comp in module.computations.values():
             for instr in comp.instructions:
                 if instr.op_class is OpClass.SYNC_SET:
                     instr.sync = SyncInfo(kind=SyncKind.BARRIER,
-                                          sets=(instr.name,))
+                                          sets=(self._sync_tag(instr),))
                 elif instr.op_class is OpClass.SYNC_WAIT:
-                    instr.sync = SyncInfo(kind=SyncKind.BARRIER,
-                                          waits=tuple(instr.operands))
+                    instr.sync = SyncInfo(
+                        kind=SyncKind.BARRIER,
+                        waits=tuple(self._effective_tag(comp, op)
+                                    for op in instr.operands))
                 elif instr.shape.dtype == "token" or instr.opcode == "after-all":
-                    instr.sync = SyncInfo(kind=SyncKind.TOKEN,
-                                          sets=(instr.name,),
-                                          waits=tuple(instr.operands))
+                    instr.sync = SyncInfo(
+                        kind=SyncKind.TOKEN,
+                        sets=(self._sync_tag(instr),),
+                        waits=tuple(self._effective_tag(comp, op)
+                                    for op in instr.operands))
+
+    @staticmethod
+    def _sync_tag(instr: Instruction) -> str:
+        m = _SYNC_TAG_RE.search(instr.attributes.get("frontend_attributes",
+                                                     ""))
+        return m.group(1) if m else instr.name
+
+    def _effective_tag(self, comp: Computation, operand: str) -> str:
+        """The sync identifier an operand reference waits on: the operand
+        op's sync_tag when declared, its name otherwise (unknown operands
+        keep their name, matching the pre-sync_tag behavior)."""
+        src = comp.get(operand)
+        return operand if src is None else self._sync_tag(src)
 
     def _annotate_trip_counts(self, module: Module) -> None:
         hinted = dict(self.hints.get("while_trip_counts", {}))

@@ -48,10 +48,12 @@ from .isa import EdgeKind, Instruction, OpClass, StallClass
 #: pressure); v3 added the ``issue_pressure`` section (multi-stream
 #: issue-queue / scheduler-contention pressure); v4 added the ``advice``
 #: section (ranked what-if-replayed optimization advice from
-#: ``repro.advisor``).  Older payloads are still readable — ``from_dict``
-#: migrates them with explicit "not recorded" defaults, so a warm disk
-#: cache survives each bump.
-SCHEMA_VERSION = 4
+#: ``repro.advisor``); v5 added the ``rewrites`` section (applied,
+#: equivalence-checked HLO rewrites from ``repro.rewrite`` with
+#: predicted-vs-realized speedups).  Older payloads are still readable —
+#: ``from_dict`` migrates them with explicit "not recorded" defaults, so
+#: a warm disk cache survives each bump.
+SCHEMA_VERSION = 5
 
 #: Oldest payload generation ``Diagnosis.from_dict`` can migrate forward.
 MIN_SCHEMA_VERSION = 1
@@ -75,6 +77,15 @@ ISSUE_PRESSURE_NOT_RECORDED = {
 ADVICE_NOT_RECORDED = {
     "recorded": False,
     "note": "not recorded (advisor not run, or pre-v4 schema payload)",
+}
+
+#: The ``rewrites`` default: migrated pre-v5 payloads AND v5 diagnoses
+#: whose request did not opt into the rewrite loop (``rewrite=False``
+#: skips the transform + re-analysis) — one constant, so both paths
+#: serialize identically (same contract as ``ADVICE_NOT_RECORDED``).
+REWRITES_NOT_RECORDED = {
+    "recorded": False,
+    "note": "not recorded (rewrite loop not run, or pre-v5 schema payload)",
 }
 
 
@@ -244,6 +255,12 @@ class Diagnosis:
     # not run (advise=False requests, measured profiles, pre-v4 payloads).
     advice: Dict[str, Any] = field(
         default_factory=lambda: dict(ADVICE_NOT_RECORDED))
+    # Applied HLO rewrites (schema v5): equivalence-checked transforms
+    # from `repro.rewrite` with predicted-vs-realized speedups per the
+    # re-analyzed rewritten text, or {"recorded": False, ...} when the
+    # rewrite loop was not run (rewrite=False requests, pre-v5 payloads).
+    rewrites: Dict[str, Any] = field(
+        default_factory=lambda: dict(REWRITES_NOT_RECORDED))
     schema_version: int = SCHEMA_VERSION
 
     # -- construction ----------------------------------------------------------
@@ -372,6 +389,7 @@ class Diagnosis:
             "sync_resources": self.sync_resources,
             "issue_pressure": self.issue_pressure,
             "advice": self.advice,
+            "rewrites": self.rewrites,
             "recommendations": [r.to_dict() for r in self.recommendations],
         })
         return out
@@ -384,9 +402,10 @@ class Diagnosis:
                 f"Diagnosis schema_version {version} outside supported "
                 f"range [{MIN_SCHEMA_VERSION}, {SCHEMA_VERSION}]")
         # Graceful migration: v1 payloads (pre-sync_resources), v2
-        # payloads (pre-issue_pressure) and v3 payloads (pre-advice) read
-        # fine — a warm disk cache survives each schema bump with an
-        # explicit "not recorded" default instead of a reject.
+        # payloads (pre-issue_pressure), v3 payloads (pre-advice) and v4
+        # payloads (pre-rewrites) read fine — a warm disk cache survives
+        # each schema bump with an explicit "not recorded" default
+        # instead of a reject.
         sync_resources = data.get("sync_resources")
         if sync_resources is None:
             sync_resources = dict(SYNC_RESOURCES_NOT_RECORDED)
@@ -396,6 +415,9 @@ class Diagnosis:
         advice = data.get("advice")
         if advice is None:
             advice = dict(ADVICE_NOT_RECORDED)
+        rewrites = data.get("rewrites")
+        if rewrites is None:
+            rewrites = dict(REWRITES_NOT_RECORDED)
         cov = data.get("single_dependency_coverage", {})
         return cls(
             backend=data["backend"],
@@ -416,6 +438,7 @@ class Diagnosis:
             sync_resources=sync_resources,
             issue_pressure=issue_pressure,
             advice=advice,
+            rewrites=rewrites,
             schema_version=SCHEMA_VERSION,
         )
 
@@ -509,6 +532,30 @@ class Diagnosis:
                 + f"; confidence {item.get('confidence', 0.0):.2f})")
         return lines
 
+    def _rewrite_lines(self, top_k: int = 5) -> List[str]:
+        """Human-readable applied-rewrite lines ("1.32x realized (100% of
+        predicted) CoalesceSyncTags …") shared by the markdown and LLM
+        views; empty when not recorded."""
+        rw = self.rewrites or {}
+        if not rw.get("recorded"):
+            return []
+        lines: List[str] = []
+        for item in rw.get("items", [])[:top_k]:
+            mut = item.get("mutation", {})
+            lines.append(
+                f"**{item.get('realized_speedup', 0.0):.2f}x realized** "
+                f"({item.get('realized_fraction', 0.0):.0%} of the "
+                f"{item.get('predicted_speedup', 0.0):.2f}x predicted) "
+                f"[{item.get('rule', '?')}, {item.get('source', '?')}] "
+                f"{mut.get('kind', '?')} — certificate: "
+                f"{item.get('certificate', {}).get('declared', '?')}")
+        for s in rw.get("skipped", [])[:3]:
+            refusal = s.get("refusal", {})
+            lines.append(
+                f"skipped [{s.get('rule', '?')}]: "
+                f"{refusal.get('code', '?')} — {refusal.get('reason', '')}")
+        return lines
+
     def to_markdown(self) -> str:
         """Human-readable report (the profiler-UI rendering)."""
         lines = [
@@ -549,6 +596,10 @@ class Diagnosis:
         if advice_lines:
             lines += ["", "## Optimization advice (what-if replayed)", ""]
             lines += [f"- {l}" for l in advice_lines]
+        rewrite_lines = self._rewrite_lines()
+        if rewrite_lines:
+            lines += ["", "## Applied rewrites (predicted vs realized)", ""]
+            lines += [f"- {l}" for l in rewrite_lines]
         if self.recommendations:
             lines += ["", "## Recommendations", ""]
             for r in self.recommendations:
@@ -603,6 +654,11 @@ class Diagnosis:
                 else:
                     lines.append("- (advice not recorded: the request did "
                                  "not run the advisor)")
+                rewrite_lines = self._rewrite_lines()
+                if rewrite_lines:
+                    lines.append("#### Applied rewrites "
+                                 "(predicted vs realized)")
+                    lines += [f"- {l}" for l in rewrite_lines]
             return "\n".join(lines) + "\n"
         raise ValueError(f"unknown context level {level!r}")
 

@@ -57,7 +57,10 @@ from .session import LeoSession, ModuleLike, SessionStats
 #: v4: the optional advisor (what-if replay) rides the diagnosis; the
 #: `advise` knob joins the key list so advice-carrying artifacts never
 #: answer advice-free requests (or vice versa).
-DIAGNOSIS_KEY_VERSION = 4
+#: v5: the optional rewrite loop (equivalence-checked HLO rewrites with
+#: realized speedups) rides the diagnosis; the `rewrite` knob joins the
+#: key list under the same never-alias rule as `advise`.
+DIAGNOSIS_KEY_VERSION = 5
 
 
 @dataclass
@@ -77,6 +80,7 @@ class AnalyzeRequest:
     n_chains: int = 5
     prune_unexecuted: bool = True
     advise: bool = False
+    rewrite: bool = False
     request_id: Optional[str] = None
     schema_version: int = SCHEMA_VERSION
 
@@ -103,6 +107,7 @@ class AnalyzeRequest:
             "n_chains": self.n_chains,
             "prune_unexecuted": self.prune_unexecuted,
             "advise": self.advise,
+            "rewrite": self.rewrite,
             "request_id": self.request_id,
         }
 
@@ -116,6 +121,7 @@ class AnalyzeRequest:
             n_chains=data.get("n_chains", 5),
             prune_unexecuted=data.get("prune_unexecuted", True),
             advise=data.get("advise", False),
+            rewrite=data.get("rewrite", False),
             request_id=data.get("request_id"),
             schema_version=data.get("schema_version", 0),
         )
@@ -176,6 +182,7 @@ class LeoService:
         self.metrics = metrics
         self._m_diagnoses = self._m_cache = None
         self._m_parse = self._m_pipeline = self._m_advisor = None
+        self._m_rewrite = None
         if metrics is not None:
             self._m_diagnoses = metrics.counter(
                 "leo_diagnoses_total",
@@ -194,6 +201,9 @@ class LeoService:
             self._m_advisor = metrics.histogram(
                 "leo_advisor_seconds",
                 "What-if advisor latency on advise=True diagnosis misses.")
+            self._m_rewrite = metrics.histogram(
+                "leo_rewrite_seconds",
+                "Rewrite-loop latency on rewrite=True diagnosis misses.")
             g = metrics.gauge(
                 "leo_session_cache_hits",
                 "Session single-flight cache hit counters, per op.",
@@ -310,7 +320,8 @@ class LeoService:
     def _diagnosis_key(self, program: ModuleLike, backend: Any,
                        hints: Optional[dict], n_chains: int,
                        prune_unexecuted: bool,
-                       advise: bool = False) -> Optional[str]:
+                       advise: bool = False,
+                       rewrite: bool = False) -> Optional[str]:
         """Content key for a diagnosis; None for identity-keyed Modules
         (not content-hashable, so never disk-cached).
 
@@ -334,7 +345,7 @@ class LeoService:
                            backend.sync))
         h = hashlib.sha256()
         h.update(json.dumps([
-            mkey, backend_fp, n_chains, prune_unexecuted, advise,
+            mkey, backend_fp, n_chains, prune_unexecuted, advise, rewrite,
             DIAGNOSIS_KEY_VERSION,
             self.session.pipeline.names,
         ]).encode())
@@ -345,7 +356,8 @@ class LeoService:
                  hints: Optional[dict] = None,
                  n_chains: int = 5,
                  prune_unexecuted: bool = True,
-                 advise: bool = False) -> Diagnosis:
+                 advise: bool = False,
+                 rewrite: bool = False) -> Diagnosis:
         """Analyze and return the serializable :class:`Diagnosis`,
         consulting the memory and disk diagnosis tiers first — a warm
         disk tier answers without parsing or running the pipeline.
@@ -354,11 +366,19 @@ class LeoService:
         (:mod:`repro.advisor`) on cache misses and lands ranked,
         speedup-priced advice in the Diagnosis ``advice`` section
         (schema v4); advice-carrying artifacts are cached under their
-        own key, so toggling the knob never serves a stale shape."""
+        own key, so toggling the knob never serves a stale shape.
+
+        ``rewrite=True`` closes the loop (:mod:`repro.rewrite`): the
+        top advice is lowered to equivalence-checked HLO rewrites, each
+        rewritten text is re-analyzed through this same session, and the
+        ``rewrites`` section (schema v5) lands predicted-vs-realized
+        speedups.  The advisor runs internally either way, but the
+        ``advice`` section is only recorded when ``advise=True`` — the
+        two knobs key the caches independently."""
         b = resolve_backend(backend) if backend is not None \
             else self.session.default_backend
         dkey = self._diagnosis_key(program, b, hints, n_chains,
-                                   prune_unexecuted, advise)
+                                   prune_unexecuted, advise, rewrite)
         # cached entries are returned as copies: a caller mutating its
         # Diagnosis (e.g. inserting a pipeline-level recommendation, as
         # benchmarks/harness.py does) must not poison the shared cache
@@ -402,7 +422,8 @@ class LeoService:
         if self._m_pipeline is not None:
             self._m_pipeline.observe(time.monotonic() - t0)
         diag = Diagnosis.from_analysis(analysis, max_chains=n_chains)
-        if advise:
+        rep = None
+        if advise or rewrite:
             # lazy: repro.advisor imports core, so core must not import
             # it at module scope (and advice-free serving never pays it)
             from ..advisor import Advisor, advice_section
@@ -412,7 +433,23 @@ class LeoService:
                 profile=analysis.profile, blame=analysis.blame)
             if self._m_advisor is not None:
                 self._m_advisor.observe(time.monotonic() - t1)
-            diag.advice = advice_section(rep.advice, rep)
+            if advise:
+                diag.advice = advice_section(rep.advice, rep)
+        if rewrite:
+            # same lazy-import rule as the advisor; verification samples
+            # the module re-parsed from each rewritten text directly
+            # (identical makespan to a full session.analyze by the
+            # round-trip guarantee, without paying a cold pipeline per
+            # rewrite — the bench rewrite-overhead gate holds it < 4x)
+            from ..rewrite import RewriteLoop, rewrites_section
+            t2 = time.monotonic()
+            rw = RewriteLoop().run(
+                analysis.module, b, hints=hints,
+                profile=analysis.profile, blame=analysis.blame,
+                advisor_report=rep)
+            if self._m_rewrite is not None:
+                self._m_rewrite.observe(time.monotonic() - t2)
+            diag.rewrites = rewrites_section(rw)
         if dkey is not None:
             with self._lock:
                 self._diagnoses[dkey] = diag.copy()
@@ -432,12 +469,12 @@ class LeoService:
                 request.hlo_text, backends=request.backends,
                 hints=request.hints, n_chains=request.n_chains,
                 prune_unexecuted=request.prune_unexecuted,
-                advise=request.advise)
+                advise=request.advise, rewrite=request.rewrite)
         return self.diagnose(
             request.hlo_text, backend=request.backend, hints=request.hints,
             n_chains=request.n_chains,
             prune_unexecuted=request.prune_unexecuted,
-            advise=request.advise)
+            advise=request.advise, rewrite=request.rewrite)
 
     def submit_async(self, request: AnalyzeRequest) -> Future:
         """`submit` as a Future — the non-blocking shape a queue-driven

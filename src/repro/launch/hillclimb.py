@@ -277,6 +277,47 @@ def run_whatif(backend_name, *, mode="both", budget=12, seed=0,
     return out
 
 
+def run_rewrite(backend_name, *, top_k=2, n_copies=48, outdir=None,
+                hlo_text=None):
+    """CLI entry for the closed loop: lower the advisor's top advice to
+    equivalence-checked HLO rewrites via the real text path (emit ->
+    re-parse -> full re-analysis) and report predicted vs realized."""
+    from ..core import resolve_backend
+    from ..core.session import LeoSession
+    from ..rewrite import RewriteLoop
+    from .analysis_server import copy_storm_hlo
+
+    backend = resolve_backend(backend_name)
+    text = hlo_text if hlo_text is not None else copy_storm_hlo(n_copies)
+    session = LeoSession()
+    t0 = time.monotonic()
+    report = RewriteLoop(top_k=top_k).run(text, backend, session=session)
+    seconds = time.monotonic() - t0
+    out = report.to_dict()
+    out["loop_seconds"] = seconds
+    for o in report.outcomes:
+        print(f"[rewrite:{backend.name}] {o.rule} ({o.source}): "
+              f"{o.mutation.get('kind')} predicted "
+              f"{o.predicted_speedup:.3f}x -> realized "
+              f"{o.realized_speedup:.3f}x "
+              f"({o.realized_fraction:.0%} of predicted)")
+    for s in report.skipped:
+        print(f"[rewrite:{backend.name}] skipped {s['rule']}: "
+              f"{s['refusal']['code']}")
+    best = report.best
+    print(f"[rewrite:{backend.name}] best "
+          f"{best.realized_speedup:.3f}x realized"
+          if best is not None else
+          f"[rewrite:{backend.name}] no applicable rewrite")
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir, f"rewrite__{backend.name}.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[rewrite] wrote {path}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", choices=sorted(CELLS))
@@ -286,6 +327,12 @@ def main():
     ap.add_argument("--whatif", action="store_true",
                     help="run the model-only mutation search instead of "
                          "lowering a cell")
+    ap.add_argument("--rewrite", action="store_true",
+                    help="lower the advisor's top advice to equivalence-"
+                         "checked HLO rewrites and measure realized vs "
+                         "predicted speedup via the real text path")
+    ap.add_argument("--top-k", type=int, default=2,
+                    help="advice items the --rewrite loop lowers")
     ap.add_argument("--backend", default="nvidia_gh200")
     ap.add_argument("--mode", default="both",
                     choices=("blind", "guided", "both"))
@@ -298,13 +345,17 @@ def main():
                     help="copy-storm width for the --whatif workload")
     args = ap.parse_args()
 
+    if args.rewrite:
+        run_rewrite(args.backend, top_k=args.top_k, n_copies=args.copies,
+                    outdir=args.outdir)
+        return
     if args.whatif:
         run_whatif(args.backend, mode=args.mode, budget=args.budget,
                    seed=args.seed, n_copies=args.copies,
                    outdir=args.outdir)
         return
     if args.cell is None:
-        ap.error("--cell is required unless --whatif is given")
+        ap.error("--cell is required unless --whatif or --rewrite is given")
     spec = CELLS[args.cell]
     for name, model_flags, opt_overrides in spec["variants"]:
         run_variant(spec["arch"], spec["shape"], name, model_flags,

@@ -255,13 +255,15 @@ class LeoClient:
                  n_chains: int = 5,
                  prune_unexecuted: bool = True,
                  advise: bool = False,
+                 rewrite: bool = False,
                  deadline_seconds: Optional[float] = None
                  ) -> Union[Diagnosis, Dict[str, Diagnosis]]:
         return self.submit(AnalyzeRequest(
             hlo_text=hlo_text, backend=backend,
             backends=list(backends) if backends is not None else None,
             hints=hints, n_chains=n_chains,
-            prune_unexecuted=prune_unexecuted, advise=advise),
+            prune_unexecuted=prune_unexecuted, advise=advise,
+            rewrite=rewrite),
             deadline_seconds=deadline_seconds)
 
     def diagnose_batch(self, requests: Sequence[AnalyzeRequest], *,

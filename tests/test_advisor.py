@@ -338,7 +338,7 @@ class TestServiceAdvice:
                             advise=True)
 
     def test_advise_lands_in_schema_v4(self, advised):
-        assert advised.schema_version == 4
+        assert advised.schema_version == 5
         assert advised.advice["recorded"] is True
         assert advised.advice["count"] >= 1
         top = advised.advice["items"][0]
@@ -505,7 +505,7 @@ class TestProperties:
         def prop(backend, n, advise, n_chains):
             diag = svc.diagnose(_storm_hlo(n), backend=backend,
                                 advise=advise, n_chains=n_chains)
-            assert diag.schema_version == 4
+            assert diag.schema_version == 5
             assert diag.advice["recorded"] is advise
             assert Diagnosis.from_json(diag.to_json()) == diag
 

@@ -17,6 +17,7 @@ import pytest
 from repro.core.report import (
     ADVICE_NOT_RECORDED,
     ISSUE_PRESSURE_NOT_RECORDED,
+    REWRITES_NOT_RECORDED,
     SCHEMA_VERSION,
     Diagnosis,
 )
@@ -297,6 +298,40 @@ class TestCrossVersion:
         v3_by_hand["schema_version"] = 3
         assert migrated.to_json() == \
             Diagnosis.from_dict(v3_by_hand).to_json()
+
+    def test_v4_client_against_v5_server(self, copystorm_hlo_text):
+        """PR-8 ISSUE acceptance: a v4-era client asking a v5 server for
+        rewrite-bearing diagnoses gets a genuine v4 payload (the
+        ``rewrites`` section is dropped on the wire, ``advice`` kept),
+        and migrating it forward equals the hand-built v4 migration
+        fixture recipe."""
+        svc = LeoService()
+        with LeoHttpd(service=svc, port=0, slots=2) as app:
+            with LeoClient(port=app.port, accept_schema=4) as client:
+                resp = client.submit_wire(AnalyzeRequest(
+                    hlo_text=copystorm_hlo_text, backend="nvidia_gh200",
+                    advise=True, rewrite=True))
+            inproc = svc.submit(AnalyzeRequest(
+                hlo_text=copystorm_hlo_text, backend="nvidia_gh200",
+                advise=True, rewrite=True))
+        assert inproc.rewrites["recorded"] is True
+        assert resp.schema_version == 4
+        # a genuine v4 payload on the wire: the v5-only section is gone,
+        # the v4 advice section survives
+        assert "rewrites" not in resp.payload
+        assert "advice" in resp.payload
+        assert resp.payload["schema_version"] == 4
+        migrated = resp.result()
+        assert migrated.schema_version == SCHEMA_VERSION
+        assert migrated.rewrites == REWRITES_NOT_RECORDED
+        assert migrated.advice == inproc.advice
+        # identical to migrating the same v4 payload built by hand from
+        # the in-process diagnosis (the test_syncmodel fixture recipe)
+        v4_by_hand = inproc.to_dict()
+        del v4_by_hand["rewrites"]
+        v4_by_hand["schema_version"] = 4
+        assert migrated.to_json() == \
+            Diagnosis.from_dict(v4_by_hand).to_json()
 
     def test_future_client_negotiates_down(self, async_hlo_text):
         """A newer-generation client (accept_schema > server's) just gets

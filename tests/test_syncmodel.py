@@ -524,7 +524,7 @@ ENTRY %main.1 (arg0: f32[64,64]) -> f32[64,64] {
 
 
 # --------------------------------------------------------------------------
-# Schema v1/v2/v3 -> v4 migration (PR-3/PR-4/PR-7 satellites).
+# Schema v1-v4 -> v5 migration (PR-3/PR-4/PR-7/PR-8 satellites).
 # --------------------------------------------------------------------------
 
 class TestSchemaMigration:
@@ -532,7 +532,9 @@ class TestSchemaMigration:
         an = analyze_hlo(async_hlo_text, hw="tpu_v5e",
                          hints={"total_devices": 8})
         data = Diagnosis.from_analysis(an).to_dict()
-        del data["advice"]                  # pre-v4
+        del data["rewrites"]                # pre-v5
+        if version < 4:
+            del data["advice"]              # pre-v4
         if version < 3:
             del data["issue_pressure"]      # pre-v3
         if version < 2:
@@ -542,7 +544,7 @@ class TestSchemaMigration:
 
     def test_v1_payload_migrates_with_not_recorded_defaults(self,
                                                             async_hlo_text):
-        assert SCHEMA_VERSION == 4 and MIN_SCHEMA_VERSION == 1
+        assert SCHEMA_VERSION == 5 and MIN_SCHEMA_VERSION == 1
         diag = Diagnosis.from_dict(self._payload(async_hlo_text, 1))
         assert diag.schema_version == SCHEMA_VERSION
         assert diag.sync_resources["recorded"] is False
@@ -551,7 +553,9 @@ class TestSchemaMigration:
         assert "not recorded" in diag.issue_pressure["note"]
         assert diag.advice["recorded"] is False
         assert "not recorded" in diag.advice["note"]
-        # migrated payloads re-serialize as v4 and round-trip exactly
+        assert diag.rewrites["recorded"] is False
+        assert "not recorded" in diag.rewrites["note"]
+        # migrated payloads re-serialize as v5 and round-trip exactly
         assert Diagnosis.from_json(diag.to_json()) == diag
 
     def test_v2_payload_keeps_sync_resources_and_defaults_issue(
@@ -565,6 +569,7 @@ class TestSchemaMigration:
         assert diag.sync_resources["pools"]
         assert diag.issue_pressure["recorded"] is False
         assert diag.advice["recorded"] is False
+        assert diag.rewrites["recorded"] is False
         assert Diagnosis.from_json(diag.to_json()) == diag
 
     def test_v3_payload_keeps_issue_pressure_and_defaults_advice(
@@ -578,6 +583,20 @@ class TestSchemaMigration:
         assert diag.issue_pressure["recorded"] is True
         assert diag.advice["recorded"] is False
         assert "not recorded" in diag.advice["note"]
+        assert diag.rewrites["recorded"] is False
+        assert Diagnosis.from_json(diag.to_json()) == diag
+
+    def test_v4_payload_keeps_advice_and_defaults_rewrites(
+            self, async_hlo_text):
+        """PR-8 ISSUE acceptance: v4 payloads migrate into v5 with an
+        explicit "not recorded" rewrites default; every recorded section
+        survives untouched."""
+        diag = Diagnosis.from_dict(self._payload(async_hlo_text, 4))
+        assert diag.schema_version == SCHEMA_VERSION
+        assert diag.sync_resources["recorded"] is True
+        assert diag.issue_pressure["recorded"] is True
+        assert diag.rewrites["recorded"] is False
+        assert "not recorded" in diag.rewrites["note"]
         assert Diagnosis.from_json(diag.to_json()) == diag
 
     def test_newer_schema_still_rejected(self, async_hlo_text):
@@ -589,7 +608,7 @@ class TestSchemaMigration:
         with pytest.raises(ValueError, match="schema_version"):
             Diagnosis.from_dict(data)
 
-    @pytest.mark.parametrize("version", [1, 2, 3])
+    @pytest.mark.parametrize("version", [1, 2, 3, 4])
     def test_service_serves_migrated_artifact_without_pipeline(
             self, async_hlo_text, tmp_path, version):
         """The diagnosis disk key deliberately excludes SCHEMA_VERSION, so
