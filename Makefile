@@ -22,8 +22,9 @@
 #                       geomean-step-time regression vs the committed
 #                       benchmarks/baseline.json, on the advisor
 #                       overhead gate (advise=True < 3x the plain
-#                       pipeline per GPU backend), or on the rewrite
-#                       overhead gate (rewrite=True < 4x)
+#                       pipeline per GPU backend), on the rewrite
+#                       overhead gate (rewrite=True < 4x), or on the
+#                       occupancy overhead gate (occupancy=True < 5x)
 #   make advisor-smoke— the what-if advisor lane: the advisor demo's
 #                       three acts (identity replay, replay-priced
 #                       advice, guided-vs-blind search) plus the advisor
@@ -35,6 +36,13 @@
 #                       equivalence certificates, predicted-vs-realized
 #                       >= 80%) plus the rewrite unit tests and the
 #                       rewrite-divergence golden (also under the CI
+#                       golden-drift gate)
+#   make occupancy-smoke — the wave-residency lane: occupancy model +
+#                       sampler unit tests (W=1 byte-parity anchor,
+#                       hidden/exposed conservation) plus the
+#                       occupancy-divergence golden — the same storm
+#                       must verdict decisive/marginal/harmful on
+#                       AMD/Intel/NVIDIA (also under the CI
 #                       golden-drift gate)
 #   make net-smoke    — the networked-serving lane: start `--serve` on an
 #                       ephemeral port with a 1-slot/1-deep queue, run the
@@ -49,7 +57,7 @@ PYTEST_FLAGS := -x -q
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 quick bench serve-smoke sync-smoke bench-smoke net-smoke \
-	advisor-smoke rewrite-smoke
+	advisor-smoke rewrite-smoke occupancy-smoke
 
 tier1:
 	$(PY) -m pytest $(PYTEST_FLAGS)
@@ -61,7 +69,7 @@ bench:
 	$(PY) -m benchmarks.run
 
 bench-smoke:
-	$(PY) -m benchmarks.bench_smoke --out BENCH_pr8.json
+	$(PY) -m benchmarks.bench_smoke --out BENCH_pr9.json
 
 advisor-smoke:
 	$(PY) examples/advisor_demo.py --smoke
@@ -72,6 +80,10 @@ rewrite-smoke:
 	$(PY) examples/rewrite_demo.py --smoke
 	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_rewrite.py \
 		tests/test_rewrite_divergence.py
+
+occupancy-smoke:
+	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_issuemodel.py \
+		tests/test_occupancy_divergence.py
 
 sync-smoke:
 	$(PY) -m pytest $(PYTEST_FLAGS) tests/test_syncmodel.py \

@@ -27,6 +27,11 @@ The PR-8 rewrite lane extends it: a fresh-cache ``diagnose(rewrite=
 True)`` — advisor + program rewrites + a full re-analysis of every
 rewritten text — must stay under 4x the plain pipeline per GPU backend.
 
+The PR-9 occupancy lane rides the same protocol: a fresh-cache
+``diagnose(options=DiagnoseOptions(occupancy=True))`` — the pipeline
+re-run under the part's native wave residency — must stay under 5x the
+plain pipeline per GPU backend.
+
 Each run also appends its geomeans to the committed
 ``benchmarks/trajectory.json`` (keyed by the output artifact name, so
 re-running the same PR's lane replaces, never duplicates) — the
@@ -48,7 +53,7 @@ from typing import Dict, List
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 DEFAULT_TRAJECTORY = os.path.join(os.path.dirname(__file__),
                                   "trajectory.json")
-DEFAULT_OUTPUT = "BENCH_pr8.json"
+DEFAULT_OUTPUT = "BENCH_pr9.json"
 DEFAULT_THRESHOLD = 0.10
 
 #: Advisor-lane gate: advise=True must cost < this multiple of the plain
@@ -61,6 +66,12 @@ ADVISOR_REPEATS = 3
 #: every rewritten text) must cost < this multiple of the plain pipeline
 #: on the same cold cache (ISSUE PR-8 satellite).
 REWRITE_GATE = 4.0
+
+#: Occupancy-lane gate: occupancy=True (the pipeline under the part's
+#: native wave residency, cached separately by the derived backend name)
+#: must cost < this multiple of the plain pipeline on the same cold
+#: cache (ISSUE PR-9 satellite).
+OCCUPANCY_GATE = 5.0
 
 
 #: Table-IV workloads in the trimmed subset (one per family).
@@ -140,17 +151,18 @@ def advisor_lane() -> Dict[str, object]:
     Every timing is a fresh :class:`LeoService` (cold memory/disk tiers),
     best-of-``ADVISOR_REPEATS`` — both sides pay the same parse +
     pipeline, so the ratio isolates the advisor's what-if replays."""
-    from repro.core import LeoService
+    from repro.core import DiagnoseOptions, LeoService
     from repro.launch.analysis_server import copy_storm_hlo
 
     hlo = copy_storm_hlo(48)
 
     def best_of(backend: str, advise: bool) -> float:
+        opts = DiagnoseOptions(advise=advise)
         best = math.inf
         for _ in range(ADVISOR_REPEATS):
             service = LeoService()
             t0 = time.perf_counter()
-            service.diagnose(hlo, backend=backend, advise=advise)
+            service.diagnose(hlo, backend=backend, options=opts)
             best = min(best, time.perf_counter() - t0)
         return best
 
@@ -178,17 +190,18 @@ def rewrite_lane() -> Dict[str, object]:
     isolates advisor replays + rewrite application + the full
     re-analysis of every rewritten text (the most expensive part — each
     applied rewrite pays a second pipeline)."""
-    from repro.core import LeoService
+    from repro.core import DiagnoseOptions, LeoService
     from repro.launch.analysis_server import copy_storm_hlo
 
     hlo = copy_storm_hlo(48)
 
     def best_of(backend: str, rewrite: bool) -> float:
+        opts = DiagnoseOptions(rewrite=rewrite)
         best = math.inf
         for _ in range(ADVISOR_REPEATS):
             service = LeoService()
             t0 = time.perf_counter()
-            service.diagnose(hlo, backend=backend, rewrite=rewrite)
+            service.diagnose(hlo, backend=backend, options=opts)
             best = min(best, time.perf_counter() - t0)
         return best
 
@@ -207,6 +220,59 @@ def rewrite_lane() -> Dict[str, object]:
         "repeats_best_of": ADVISOR_REPEATS,
         "per_backend": per_backend,
     }
+
+
+def occupancy_lane() -> Dict[str, object]:
+    """Time plain vs occupancy=True diagnosis on the 48-copy storm.
+
+    Same cold best-of-N protocol as :func:`advisor_lane`; the ratio
+    isolates the residency-engaged pipeline re-run (the derived
+    ``backend@wN`` name caches separately, so both sides pay one full
+    parse + pipeline on their own key)."""
+    from repro.core import DiagnoseOptions, LeoService
+    from repro.launch.analysis_server import copy_storm_hlo
+
+    hlo = copy_storm_hlo(48)
+
+    def best_of(backend: str, occupancy: bool) -> float:
+        opts = DiagnoseOptions(occupancy=occupancy)
+        best = math.inf
+        for _ in range(ADVISOR_REPEATS):
+            service = LeoService()
+            t0 = time.perf_counter()
+            service.diagnose(hlo, backend=backend, options=opts)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    per_backend = {}
+    for backend in ADVISOR_BACKENDS:
+        pipeline_s = best_of(backend, occupancy=False)
+        occupancy_s = best_of(backend, occupancy=True)
+        per_backend[backend] = {
+            "pipeline_seconds": pipeline_s,
+            "occupancy_seconds": occupancy_s,
+            "ratio": occupancy_s / pipeline_s,
+        }
+    return {
+        "workload": "copystorm_48",
+        "gate_ratio": OCCUPANCY_GATE,
+        "repeats_best_of": ADVISOR_REPEATS,
+        "per_backend": per_backend,
+    }
+
+
+def occupancy_failures(lane: Dict[str, object]) -> List[str]:
+    failures = []
+    for backend, row in sorted(lane["per_backend"].items()):
+        if row["ratio"] >= lane["gate_ratio"]:
+            failures.append(
+                f"{backend}: occupancy=True diagnosis took "
+                f"{row['occupancy_seconds']:.4f}s = {row['ratio']:.2f}x "
+                f"the plain pipeline ({row['pipeline_seconds']:.4f}s); "
+                f"the occupancy lane gates at < "
+                f"{lane['gate_ratio']:.1f}x — did the wave credit "
+                f"tracker grow per-event state?")
+    return failures
 
 
 def rewrite_failures(lane: Dict[str, object]) -> List[str]:
@@ -314,6 +380,7 @@ def main(argv=None) -> int:
     result = run_bench()
     result["advisor"] = advisor_lane()
     result["rewrite"] = rewrite_lane()
+    result["occupancy"] = occupancy_lane()
     with open(args.output, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -335,6 +402,12 @@ def main(argv=None) -> int:
         print(f"  {backend:<16s} rewrite=True {row['rewrite_seconds']:.4f}s "
               f"vs pipeline {row['pipeline_seconds']:.4f}s "
               f"({row['ratio']:.2f}x, gate <{rw['gate_ratio']:.0f}x)")
+    occ = result["occupancy"]
+    for backend, row in sorted(occ["per_backend"].items()):
+        print(f"  {backend:<16s} occupancy=True "
+              f"{row['occupancy_seconds']:.4f}s "
+              f"vs pipeline {row['pipeline_seconds']:.4f}s "
+              f"({row['ratio']:.2f}x, gate <{occ['gate_ratio']:.0f}x)")
 
     adv_failures = advisor_failures(adv)
     if adv_failures:
@@ -346,7 +419,12 @@ def main(argv=None) -> int:
         print("REWRITE OVERHEAD GATE failed:", file=sys.stderr)
         for msg in rw_failures:
             print(f"  {msg}", file=sys.stderr)
-    adv_failures = adv_failures + rw_failures
+    occ_failures = occupancy_failures(occ)
+    if occ_failures:
+        print("OCCUPANCY OVERHEAD GATE failed:", file=sys.stderr)
+        for msg in occ_failures:
+            print(f"  {msg}", file=sys.stderr)
+    adv_failures = adv_failures + rw_failures + occ_failures
 
     if args.update_baseline:
         with open(args.baseline, "w") as f:
@@ -370,8 +448,9 @@ def main(argv=None) -> int:
         return 1
     print(f"perf gate OK: no backend >"
           f"{args.threshold * 100:.0f}% slower than baseline; advisor "
-          f"overhead < {adv['gate_ratio']:.0f}x and rewrite overhead "
-          f"< {rw['gate_ratio']:.0f}x on all "
+          f"overhead < {adv['gate_ratio']:.0f}x, rewrite overhead "
+          f"< {rw['gate_ratio']:.0f}x, and occupancy overhead "
+          f"< {occ['gate_ratio']:.0f}x on all "
           f"{len(adv['per_backend'])} GPU backends")
     return 0
 

@@ -101,6 +101,7 @@ def main():
 
     copy_storm_demo(service)
     wide_ops_demo(service)
+    occupancy_demo(service)
     advice_demo(service)
 
 
@@ -164,18 +165,66 @@ def wide_ops_demo(service) -> None:
           "single-stream sampler could never produce.")
 
 
+def occupancy_demo(service) -> None:
+    """The PR-9 wave-residency story on the same storm: engaging each
+    part's *native* occupancy (``DiagnoseOptions(occupancy=True)`` →
+    ``Backend.with_occupancy()``) yields a different verdict per vendor —
+    AMD's queue-scoped waitcnt counters let 4 wavefronts hide the copy
+    latency decisively, Intel's 2 threads of hiding credit run dry
+    (stalls reclassify as ``occupancy_limited``), NVIDIA's 8 warps
+    *share* the device-scope named barriers so residency backfires, and
+    the TPUs have no residency knob at all."""
+    from repro.core import DiagnoseOptions
+    from repro.launch.analysis_server import copy_storm_hlo
+    print("\n--- wave occupancy: the same storm under native residency ---")
+    print(f"{'backend':<14s} {'residency':<22s} {'hidden':<14s} "
+          f"{'speedup':>8s}  top occupancy-limited wait")
+    storm = copy_storm_hlo(12)
+    plain = service.diagnose_fanout(storm)
+    engaged = service.diagnose_fanout(
+        storm, options=DiagnoseOptions(occupancy=True))
+    for name, diag in engaged.items():
+        occ = diag.occupancy
+        if not occ.get("recorded"):
+            print(f"{name:<14s} {'single-wave (no knob)':<22s} "
+                  f"{'-':<14s} {1.0:>7.2f}x  -")
+            continue
+        residency = f"W={occ['waves']} ({occ['limiter']})"
+        hidden = (f"{occ['hidden_fraction']:.0%} of "
+                  f"{occ['hidden_cycles'] + occ['exposed_cycles']:,.0f}cyc")
+        speedup = (plain[name].estimated_step_seconds
+                   / diag.estimated_step_seconds)
+        blame = occ.get("blame") or []
+        if blame:
+            top = max(blame, key=lambda b: b["exposed_cycles"])
+            leak = (f"{top['consumer']} <- {top['blocker']} "
+                    f"({top['exposed_cycles']:,.0f}cyc exposed)")
+        else:
+            leak = "(everything hidden)"
+        print(f"{name:<14s} {residency:<22s} {hidden:<14s} "
+              f"{speedup:>7.2f}x  {leak}")
+    print("One knob, three verdicts: decisive on AMD (queue-scoped "
+          "counters, free\nwaves), marginal on Intel (credit runs dry — "
+          "the leak is named, line by\nline), harmful on NVIDIA (8 warps "
+          "share 6 device-scope barriers) — which\nis why `raise_"
+          "occupancy` advice is priced by replay per part, never\n"
+          "handed out as generic prose.")
+
+
 def advice_demo(service) -> None:
     """Observation 2's converse, closed by the PR-7 advisor: where access
     patterns are *irregular* (a 48-copy storm against finite, differently
     shaped sync files), the fix does NOT transfer — each vendor's top
     what-if-replayed advice is a different mutation, each priced by
     rerunning the virtual sampler against the mutated machine."""
+    from repro.core import DiagnoseOptions
     from repro.launch.analysis_server import copy_storm_hlo
     print("\n--- what-if advisor: same 48-copy storm, a different fix "
           "per vendor ---")
     print(f"{'backend':<14s} {'top rule':<28s} {'mutation':<28s} "
           f"{'speedup':>8s} {'conf':>5s}")
-    fanned = service.diagnose_fanout(copy_storm_hlo(48), advise=True)
+    fanned = service.diagnose_fanout(copy_storm_hlo(48),
+                                     options=DiagnoseOptions(advise=True))
     for name, diag in fanned.items():
         adv = diag.advice
         if not adv.get("recorded") or not adv.get("items"):
@@ -191,8 +240,8 @@ def advice_demo(service) -> None:
               f"{top['confidence']:>5.2f}")
     print("Three vendors, three different top fixes for one program: "
           "batch the\nbarrier allocations where 6 CTA-shared slots thrash "
-          "(NVIDIA), coalesce\ncounter-style waits where 2 per-wave "
-          "counters alias (AMD), and re-tree\nthe serial reduction where "
+          "(NVIDIA), raise\nresidency where 4 free wavefront slots hide "
+          "the waits (AMD), and re-tree\nthe serial reduction where "
           "16 SBIDs never contend and issue is the\nbottleneck (Intel) — "
           "each speedup is a replay, not a heuristic.")
 

@@ -31,6 +31,7 @@ from .whatif import (
     ResizePool,
     ScaleLatency,
     SetIssue,
+    SetOccupancy,
     TreeReduceChain,
     WhatIfEngine,
     WhatIfResult,
@@ -42,7 +43,8 @@ from .whatif import (
 __all__ = [
     "Advice", "Advisor", "AdvisorReport", "advice_section",
     "RULES", "Evidence", "Rule", "match_rules", "rule_by_name",
-    "Mutation", "Identity", "ResizePool", "SetIssue", "ScaleLatency",
+    "Mutation", "Identity", "ResizePool", "SetIssue", "SetOccupancy",
+    "ScaleLatency",
     "CoalesceSyncTags", "PipelineAsyncChain", "RelaxSyncEdge",
     "TreeReduceChain", "Compose",
     "WhatIfEngine", "WhatIfResult", "mutation_from_dict",

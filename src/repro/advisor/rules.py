@@ -31,6 +31,7 @@ from .whatif import (
     ResizePool,
     ScaleLatency,
     SetIssue,
+    SetOccupancy,
     TreeReduceChain,
 )
 
@@ -71,6 +72,28 @@ class Evidence:
     def pipe_busy_cycles(self) -> float:
         ip = self.profile.issue_pressure
         return ip.pipe_busy_cycles if ip is not None else 0.0
+
+    # -- wave-occupancy evidence ----------------------------------------------
+
+    @property
+    def native_occupancy(self):
+        from ..core.hwmodel import SINGLE_WAVE
+        return getattr(self.backend, "native_occupancy", None) or SINGLE_WAVE
+
+    @property
+    def occupancy_engaged(self) -> bool:
+        """True when this analysis already modeled multi-wave residency."""
+        return self.backend.occupancy.multi_wave
+
+    @property
+    def occupancy_limited_cycles(self) -> float:
+        op = getattr(self.profile, "occupancy_pressure", None)
+        return op.occupancy_limited_cycles if op is not None else 0.0
+
+    @property
+    def hidden_fraction(self) -> float:
+        op = getattr(self.profile, "occupancy_pressure", None)
+        return op.hidden_fraction if op is not None else 0.0
 
     # -- stall anatomy --------------------------------------------------------
 
@@ -115,6 +138,13 @@ class Evidence:
         sync_res = self.stall_cycles(StallClass.SYNC_RESOURCE)
         if sync_res > 0:
             out.append(f"sync_resource stalls: {sync_res:.0f} cycles")
+        op = getattr(self.profile, "occupancy_pressure", None)
+        if op is not None:
+            out.append(
+                f"wave occupancy {op.waves}w ({op.limiter}-limited): "
+                f"{op.hidden_cycles:.0f} cycles hidden "
+                f"({op.hidden_fraction:.0%}), {op.exposed_cycles:.0f} "
+                f"exposed past the resident waves")
         return out
 
 
@@ -207,9 +237,14 @@ def _m_rebalance(ev: Evidence) -> bool:
 
 def _c_rebalance(ev: Evidence) -> List[Mutation]:
     q = ev.issue.queues
-    return [SetIssue(policy="round_robin"),
-            SetIssue(queues=max(2, q * 2)),
-            SetIssue(width=ev.issue.width + 1)]
+    out: List[Mutation] = [SetIssue(policy="round_robin"),
+                           SetIssue(queues=max(2, q * 2)),
+                           SetIssue(width=ev.issue.width + 1)]
+    if ev.native_occupancy.multi_wave and not ev.occupancy_engaged:
+        # more resident waves = more arbitration choices; priced jointly
+        # with the sync-pool sharing it costs (never assumed to win)
+        out.append(SetOccupancy())
+    return out
 
 
 def _m_pipe_pressure(ev: Evidence) -> bool:
@@ -222,6 +257,38 @@ def _c_pipe_pressure(ev: Evidence) -> List[Mutation]:
             SetIssue(policy="greedy_oldest")
             if ev.issue.policy == "round_robin"
             else SetIssue(policy="round_robin")]
+
+
+def _m_raise_occupancy(ev: Evidence) -> bool:
+    """Latency hiding is under-provisioned: either residency is not
+    engaged while hideable latency dominates on a part that has wave
+    slots to spend, or it IS engaged and stalls still leak past the
+    resident waves (OCCUPANCY_LIMITED present)."""
+    if not ev.native_occupancy.multi_wave:
+        return False            # single-wave parts have no residency knob
+    if ev.occupancy_engaged:
+        return ev.occupancy_limited_cycles > 0
+    # Mirror what the sampler's wave credit can actually absorb: the
+    # _HIDEABLE_STALLS dependence waits plus SYNC_RESOURCE (the sampler
+    # drains credit against resource serialization too).  Scheduler
+    # contention (PIPE_BUSY / NOT_SELECTED) stays out — another wave
+    # loses the same arbitration.
+    hideable = (ev.stall_share(StallClass.MEM_DEP)
+                + ev.stall_share(StallClass.EXEC_DEP)
+                + ev.stall_share(StallClass.COLLECTIVE_WAIT)
+                + ev.stall_share(StallClass.SYNC_WAIT)
+                + ev.stall_share(StallClass.SYNC_RESOURCE))
+    return hideable >= 0.25
+
+
+def _c_raise_occupancy(ev: Evidence) -> List[Mutation]:
+    native = ev.native_occupancy
+    if ev.occupancy_engaged:
+        cur = ev.backend.occupancy
+        return [SetOccupancy(waves=cur.waves * 2),
+                SetOccupancy(window_cycles=cur.window_cycles * 2)]
+    return [SetOccupancy(),     # engage at the part's native residency
+            SetOccupancy(waves=max(2, native.waves // 2))]
 
 
 def _m_exposed_memory(ev: Evidence) -> bool:
@@ -313,8 +380,34 @@ RULES: List[Rule] = [
         candidates=_c_rebalance,
         vendor_phrasing={
             "nvidia": ("warps lose scheduler arbitration (not_selected): "
-                       "spread independent chains across warps/schedulers "
-                       "or raise occupancy so greedy-oldest has choices"),
+                       "spread independent chains across warps/schedulers, "
+                       "or raise occupancy — cap registers with "
+                       "__launch_bounds__ / -maxrregcount so more warps "
+                       "fit the register file and greedy-oldest has "
+                       "choices"),
+        },
+    ),
+    Rule(
+        name="raise_occupancy",
+        summary=("raise wave residency: co-resident waves would hide the "
+                 "exposed latency the single wave keeps eating — lower "
+                 "per-wave resource usage so more waves fit"),
+        confidence=0.8,
+        matches=_m_raise_occupancy,
+        candidates=_c_raise_occupancy,
+        vendor_phrasing={
+            "nvidia": ("raise resident warps per SM: cap the register "
+                       "budget with __launch_bounds__(threads, minBlocks) "
+                       "or -maxrregcount so more warps fit the register "
+                       "file; the priced counterfactual also charges the "
+                       "shared named-barrier cost extra warps bring"),
+            "amd": ("raise waves-per-EU: trim VGPR/LDS usage (or pin "
+                    "amdgpu-waves-per-eu) so more wavefronts occupy the "
+                    "wavefront slots and hide vmcnt latency"),
+            "intel": ("raise thread residency per Xe vector engine: "
+                      "compile for the small-GRF mode so the full 8 "
+                      "hardware threads stay resident instead of the "
+                      "large-GRF half"),
         },
     ),
     Rule(

@@ -26,7 +26,7 @@ from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.backends import Backend
-from ..core.hwmodel import IssueModel
+from ..core.hwmodel import IssueModel, OccupancyModel
 from ..core.isa import Instruction, Module, OpClass
 from ..core.sampler import StallClass, StallProfile, VirtualSampler
 
@@ -46,6 +46,7 @@ __all__ = [
     "Identity",
     "ResizePool",
     "SetIssue",
+    "SetOccupancy",
     "ScaleLatency",
     "CoalesceSyncTags",
     "PipelineAsyncChain",
@@ -174,6 +175,44 @@ class SetIssue(Mutation):
                                          ("policy", self.policy))
                  if v is not None]
         return "set issue " + ", ".join(parts or ["(unchanged)"])
+
+
+@dataclass(frozen=True)
+class SetOccupancy(Mutation):
+    """Engage or re-size the wave-occupancy model: W resident waves per
+    issue queue hiding each other's latency.
+
+    With no arguments, engages the backend's *native* residency
+    (``Backend.native_occupancy`` — what the vendor's launch knobs give
+    an unconstrained kernel); explicit fields override.  This is the
+    counterfactual behind "raise occupancy" advice: the modeled speedup
+    prices how much of the exposed latency co-resident waves would
+    actually hide — which is NOT always positive, because W waves also
+    share the device-scoped sync pools (a copy storm that fits 6
+    barriers at W=1 fights over 6//8 of them at W=8)."""
+
+    waves: Optional[int] = None
+    limiter: Optional[str] = None
+    window_cycles: Optional[float] = None
+
+    def apply_backend(self, backend: Backend) -> Backend:
+        cur = backend.occupancy if backend.occupancy.multi_wave \
+            else backend.native_occupancy
+        occ = OccupancyModel(
+            waves=self.waves if self.waves is not None else cur.waves,
+            limiter=self.limiter if self.limiter is not None
+            else cur.limiter,
+            window_cycles=self.window_cycles
+            if self.window_cycles is not None else cur.window_cycles)
+        return backend.with_occupancy(occ)
+
+    def describe(self) -> str:
+        parts = [f"{k}={v}" for k, v in (("waves", self.waves),
+                                         ("limiter", self.limiter),
+                                         ("window_cycles",
+                                          self.window_cycles))
+                 if v is not None]
+        return "set occupancy " + ", ".join(parts or ["(native residency)"])
 
 
 @dataclass(frozen=True)
@@ -445,7 +484,7 @@ class Compose(Mutation):
 
 _MUTATION_KINDS = {
     cls.__name__: cls
-    for cls in (Identity, ResizePool, SetIssue, ScaleLatency,
+    for cls in (Identity, ResizePool, SetIssue, SetOccupancy, ScaleLatency,
                 CoalesceSyncTags, PipelineAsyncChain, TreeReduceChain,
                 RelaxSyncEdge, Compose)
 }
@@ -486,7 +525,7 @@ def _canonical_profile(profile: StallProfile) -> Dict[str, Any]:
         "clock_hz": profile.clock_hz,
         "records": records,
     }
-    for name in ("sync_pressure", "issue_pressure"):
+    for name in ("sync_pressure", "issue_pressure", "occupancy_pressure"):
         report = getattr(profile, name, None)
         if report is not None and hasattr(report, "to_dict"):
             out[name] = report.to_dict()

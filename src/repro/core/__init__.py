@@ -85,11 +85,13 @@ from .hlo_parser import HloParser, parse_hlo
 from .hwmodel import (
     HARDWARE_MODELS,
     SINGLE_ISSUE,
+    SINGLE_WAVE,
     TPU_V4,
     TPU_V5E,
     TPU_V5P,
     HardwareModel,
     IssueModel,
+    OccupancyModel,
     get_hardware_model,
 )
 from .isa import (
@@ -131,14 +133,15 @@ from .sampler import (
     VirtualSampler,
     sample,
 )
-from .service import AnalyzeRequest, LeoService
+from .service import AnalyzeRequest, DiagnoseOptions, LeoService
 from .session import LeoSession, SessionStats
 from .slicing import StallChain, top_chains
 from .sync_trace import add_sync_edges
 
 __all__ = [
     # service surface (typed requests / serializable diagnoses)
-    "AnalyzeRequest", "Diagnosis", "LeoService", "Recommendation",
+    "AnalyzeRequest", "DiagnoseOptions", "Diagnosis", "LeoService",
+    "Recommendation",
     "ADVICE_NOT_RECORDED", "MIN_SCHEMA_VERSION", "SCHEMA_VERSION",
     # cache tiers
     "DiskCache", "LRUCache",
@@ -147,6 +150,7 @@ __all__ = [
     # backend registry + sync resources + issue model
     "Backend", "BackendRegistry", "DEFAULT_SYNC_MODEL", "REGISTRY",
     "IssueModel", "IssuePressureReport", "SINGLE_ISSUE",
+    "OccupancyModel", "SINGLE_WAVE",
     "SchedulerContentionBlame",
     "SyncModel", "SyncPressureReport", "SyncResourceBlame",
     "SyncResourcePool", "SyncScoreboard", "SyncSemantics",

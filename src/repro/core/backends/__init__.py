@@ -27,7 +27,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, Iterator, List, Mapping, Optional, Tuple, Union
 
-from ..hwmodel import SINGLE_ISSUE, HardwareModel, IssueModel
+from ..hwmodel import (SINGLE_ISSUE, SINGLE_WAVE, HardwareModel, IssueModel,
+                       OccupancyModel)
 from ..isa import StallClass, SyncKind
 from .syncmodel import (
     DEFAULT_SYNC_MODEL,
@@ -52,6 +53,11 @@ class Backend:
     stall_taxonomy: Mapping[StallClass, str]  # unified -> native counter name
     sync: SyncModel = DEFAULT_SYNC_MODEL
     description: str = ""
+    # The part's NATIVE wave residency (a capability, not an engagement):
+    # `hw.occupancy` stays SINGLE_WAVE on every registered backend so plain
+    # profiles are byte-identical to the pre-occupancy sampler; analysis
+    # under native residency goes through `with_occupancy()`.
+    native_occupancy: OccupancyModel = SINGLE_WAVE
 
     def __post_init__(self) -> None:
         # Legacy callers hand us the deprecated SyncSemantics knob bag;
@@ -82,6 +88,24 @@ class Backend:
                            f"{issue.policy}")
         return _dc_replace(self, name=derived,
                            hw=_dc_replace(self.hw, issue=issue))
+
+    @property
+    def occupancy(self) -> OccupancyModel:
+        """The hardware model's ACTIVE wave-residency descriptor."""
+        return getattr(self.hw, "occupancy", SINGLE_WAVE) or SINGLE_WAVE
+
+    def with_occupancy(self, occ: Optional[OccupancyModel] = None,
+                       name: Optional[str] = None) -> "Backend":
+        """Derive a backend whose sampler runs under wave residency ``occ``
+        (default: this part's native residency).  As with ``with_issue``,
+        the derived descriptor gets a distinct name covering every
+        OccupancyModel field so session/service caches (keyed on backend
+        name) can never alias the W=1 and native-W variants."""
+        occ = occ if occ is not None else self.native_occupancy
+        derived = name or (f"{self.name}@w{occ.waves}-{occ.limiter}-"
+                           f"h{occ.window_cycles:g}")
+        return _dc_replace(self, name=derived,
+                           hw=_dc_replace(self.hw, occupancy=occ))
 
 
 class UnknownBackendError(KeyError):
@@ -191,7 +215,7 @@ from . import amd, intel, nvidia, tpu  # noqa: E402,F401  (registration side eff
 
 __all__ = [
     "Backend", "BackendRegistry", "BackendLike", "IssueModel",
-    "SINGLE_ISSUE",
+    "OccupancyModel", "SINGLE_ISSUE", "SINGLE_WAVE",
     "DEFAULT_SYNC_MODEL", "SyncAcquire", "SyncLike", "SyncModel",
     "SyncPressureReport", "SyncResourcePool", "SyncScoreboard",
     "SyncSemantics", "resolve_sync_model",

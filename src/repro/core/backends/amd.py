@@ -7,7 +7,7 @@ waitcnt tracing reproduces exactly (§III-E oldest-(M-N) rule).
 """
 from __future__ import annotations
 
-from ..hwmodel import HardwareModel, IssueModel
+from ..hwmodel import HardwareModel, IssueModel, OccupancyModel
 from ..isa import StallClass, SyncKind
 from . import Backend, SyncModel, SyncResourcePool, register_backend
 
@@ -16,6 +16,14 @@ from . import Backend, SyncModel, SyncResourcePool, register_backend
 # its slot even when a sibling SIMD idles — rocprofiler's
 # `arbiter_not_selected`.
 AMD_ISSUE = IssueModel(queues=4, width=1, policy="round_robin")
+
+# Mid residency, wavefront-slot-limited: each SIMD hosts up to 8-10 wave
+# slots architecturally but VGPR/LDS budgets cap CDNA3 compute kernels
+# near 4 per SIMD.  Fewer waves than NVIDIA, but the wide 64-lane waves
+# carry more independent memory work each — a longer per-wave hiding
+# window compensating the shallower pool.
+AMD_OCCUPANCY = OccupancyModel(waves=4, limiter="wavefront_slots",
+                               window_cycles=96.0)
 
 AMD_MI300A = HardwareModel(
     name="amd_mi300a",
@@ -47,6 +55,7 @@ ROCM_TAXONOMY = {
     StallClass.FETCH: "instruction_fetch",
     StallClass.PIPE_BUSY: "mfma_pipe_busy",
     StallClass.NOT_SELECTED: "arbiter_not_selected",
+    StallClass.OCCUPANCY_LIMITED: "no_ready_wave",
     StallClass.SELF: "other",
 }
 
@@ -78,5 +87,6 @@ AMD_SYNC = SyncModel(
 AMD_MI300A_BACKEND = register_backend(Backend(
     name="amd_mi300a", vendor="amd", hw=AMD_MI300A,
     stall_taxonomy=ROCM_TAXONOMY, sync=AMD_SYNC,
+    native_occupancy=AMD_OCCUPANCY,
     description="MI300A-class: widest HBM (5.3 TB/s) per FLOP — memory-"
                 "bound kernels flip compute-bound here first."))

@@ -8,7 +8,7 @@ software scoreboarding — the token-threading mechanism LEO traces (§III-E).
 """
 from __future__ import annotations
 
-from ..hwmodel import HardwareModel, IssueModel
+from ..hwmodel import HardwareModel, IssueModel, OccupancyModel
 from ..isa import StallClass, SyncKind
 from . import Backend, SyncModel, SyncResourcePool, register_backend
 
@@ -17,6 +17,14 @@ from . import Backend, SyncModel, SyncResourcePool, register_backend
 # GPU-class parts — wide independent-op workloads that choke a 4-queue
 # part sail through here (the PR-4 wide-ops divergence golden).
 INTEL_ISSUE = IssueModel(queues=8, width=2, policy="round_robin")
+
+# Low residency, thread-limited: a Xe vector engine hosts 8 hardware
+# threads but large-GRF kernels (the XMX-heavy mode) halve that, and the
+# wide issue fabric already spreads work across 8 engines — so per-queue
+# residency is the shallowest of the three GPU-class parts.  Latency-bound
+# kernels that NVIDIA hides behind warps stay exposed here.
+INTEL_OCCUPANCY = OccupancyModel(waves=2, limiter="thread_slots",
+                                 window_cycles=32.0)
 
 INTEL_PVC = HardwareModel(
     name="intel_pvc",
@@ -48,6 +56,7 @@ LEVELZERO_TAXONOMY = {
     StallClass.FETCH: "instruction_fetch",
     StallClass.PIPE_BUSY: "pipe_stall",
     StallClass.NOT_SELECTED: "thread_not_selected",
+    StallClass.OCCUPANCY_LIMITED: "no_ready_thread",
     StallClass.SELF: "other",
 }
 
@@ -77,6 +86,7 @@ INTEL_SYNC = SyncModel(
 INTEL_PVC_BACKEND = register_backend(Backend(
     name="intel_pvc", vendor="intel", hw=INTEL_PVC,
     stall_taxonomy=LEVELZERO_TAXONOMY, sync=INTEL_SYNC,
+    native_occupancy=INTEL_OCCUPANCY,
     description="PVC-class: thin per-link Xe-Link fabric and slow "
                 "collective launch — communication-heavy programs "
                 "bottleneck here first."))

@@ -8,7 +8,7 @@ LEO's barrier tracing models (§III-E).
 """
 from __future__ import annotations
 
-from ..hwmodel import HardwareModel, IssueModel
+from ..hwmodel import HardwareModel, IssueModel, OccupancyModel
 from ..isa import StallClass, SyncKind
 from . import Backend, SyncModel, SyncResourcePool, register_backend
 
@@ -16,6 +16,14 @@ from . import Backend, SyncModel, SyncResourcePool, register_backend
 # ready warp waits only when every scheduler is occupied, and that wait is
 # what CUPTI reports as `not_selected`.
 NVIDIA_ISSUE = IssueModel(queues=4, width=1, policy="greedy_oldest")
+
+# High residency, register-limited: an SM hosts up to 64 warps (16 per
+# scheduler) but register allocation caps a realistic kernel near 8 per
+# scheduler — the `__launch_bounds__` / maxrregcount tradeoff.  Deep warp
+# pools give each co-resident warp a long independent-issue horizon, so
+# NVIDIA hides the most latency per stall of the three GPU-class parts.
+NVIDIA_OCCUPANCY = OccupancyModel(waves=8, limiter="register_file",
+                                  window_cycles=48.0)
 
 NVIDIA_GH200 = HardwareModel(
     name="nvidia_gh200",
@@ -47,6 +55,7 @@ CUPTI_TAXONOMY = {
     StallClass.FETCH: "no_instruction",
     StallClass.PIPE_BUSY: "math_pipe_throttle",
     StallClass.NOT_SELECTED: "not_selected",
+    StallClass.OCCUPANCY_LIMITED: "no_eligible_warp",
     StallClass.SELF: "misc",
 }
 
@@ -68,5 +77,6 @@ NVIDIA_SYNC = SyncModel(
 NVIDIA_GH200_BACKEND = register_backend(Backend(
     name="nvidia_gh200", vendor="nvidia", hw=NVIDIA_GH200,
     stall_taxonomy=CUPTI_TAXONOMY, sync=NVIDIA_SYNC,
+    native_occupancy=NVIDIA_OCCUPANCY,
     description="GH200-class: dominant tensor FLOPs, mid-pack HBM ratio, "
                 "fat NVLink — compute-rich, memory-ratio-poor."))

@@ -184,13 +184,16 @@ class SyncModel:
     # -- factories -------------------------------------------------------------
 
     def scoreboard(self, realloc_cycles: float = 0.0,
-                   queues: int = 1) -> "SyncScoreboard":
+                   queues: int = 1, waves: int = 1) -> "SyncScoreboard":
         """Mint a stateful allocator; ``queues`` > 1 replicates every
         ``scope="queue"`` pool per issue queue (ROADMAP's "one scoreboard
         per simulated core/queue") while ``scope="device"`` pools stay
-        shared."""
+        shared.  ``waves`` > 1 gives the simulated wave its fair share of
+        every ``scope="device"`` pool (W symmetric co-resident waves
+        contend for the same physical instances), while ``scope="queue"``
+        pools stay per-wave private — the per-wave scoreboard view."""
         return SyncScoreboard(self, realloc_cycles=realloc_cycles,
-                              queues=queues)
+                              queues=queues, waves=waves)
 
     @classmethod
     def from_semantics(cls, sem: "SyncSemantics") -> "SyncModel":
@@ -457,14 +460,24 @@ class SyncScoreboard:
     """
 
     def __init__(self, model: SyncModel, realloc_cycles: float = 0.0,
-                 queues: int = 1):
+                 queues: int = 1, waves: int = 1):
         if queues < 1:
             raise ValueError(f"queues must be >= 1, got {queues}")
+        if waves < 1:
+            raise ValueError(f"waves must be >= 1, got {waves}")
         self.model = model
         self.realloc_cycles = realloc_cycles
         self.queues = queues
+        self.waves = waves
         self._boards: Dict[str, List[_PoolBoard]] = {}
         for p in model.pools:
+            if p.scope == "device" and waves > 1:
+                # W symmetric co-resident waves share a device-scoped pool;
+                # the simulated wave sees its fair share of the instances
+                # (floored at one) — raising occupancy RAISES barrier-style
+                # pressure, the cross-vendor tradeoff §III-E predicts.
+                share = max(1, p.capacity // waves)
+                p = _dc_replace(p, instances=p.instances[:share])
             if p.scope == "queue" and queues > 1:
                 self._boards[p.name] = [
                     _PoolBoard(_dc_replace(p, instances=tuple(
@@ -549,6 +562,7 @@ class SyncScoreboard:
         clone.model = self.model
         clone.realloc_cycles = self.realloc_cycles
         clone.queues = self.queues
+        clone.waves = self.waves
         clone._boards = {name: [b.fork() for b in boards]
                          for name, boards in self._boards.items()}
         return clone

@@ -19,7 +19,11 @@ TPU_TAXONOMY = {
     StallClass.COLLECTIVE_WAIT: "ici_wait",
     StallClass.FETCH: "program_fetch",
     StallClass.PIPE_BUSY: "mxu_occupied",
+    # TPU cores run one compiler-scheduled VLIW program — there is no wave
+    # residency to raise, so these buckets are structurally empty (the
+    # native_occupancy default SINGLE_WAVE).
     StallClass.NOT_SELECTED: "not_selected",
+    StallClass.OCCUPANCY_LIMITED: "occupancy_limited",
     StallClass.SELF: "self",
 }
 

@@ -118,6 +118,25 @@ class SchedulerContentionBlame:
 
 
 @dataclass
+class OccupancyLimitedBlame:
+    """One failed-latency-hiding event: `consumer` stalled on `blocker` and
+    the co-resident waves of queue `queue` ran out of issue credit mid-wait
+    — `hidden` cycles were covered, `exposed` cycles leaked through as
+    `StallClass.OCCUPANCY_LIMITED`."""
+
+    consumer: str
+    blocker: str       # qualified producer whose latency leaked through
+    queue: int         # issue queue index
+    stall_class: str   # original hideable class ("mem_dep", "sync_wait", ...)
+    hidden_cycles: float
+    exposed_cycles: float
+
+    @property
+    def cycles(self) -> float:
+        return self.exposed_cycles
+
+
+@dataclass
 class BlameResult:
     entries: List[BlameEntry] = field(default_factory=list)
     by_producer: Dict[str, float] = field(default_factory=dict)
@@ -136,6 +155,11 @@ class BlameResult:
     # from the multi-stream sampler (NOT_SELECTED / PIPE_BUSY cycles viewed
     # through the queue lens); same conservation caveat as sync_resource.
     scheduler_contention: List[SchedulerContentionBlame] = \
+        field(default_factory=list)
+    # Failed-latency-hiding evidence channel: OCCUPANCY_LIMITED events from
+    # the multi-wave sampler (partially-hidden stalls viewed through the
+    # wave-residency lens); same conservation caveat as sync_resource.
+    occupancy_limited: List[OccupancyLimitedBlame] = \
         field(default_factory=list)
 
     @property
@@ -159,6 +183,7 @@ _SELF_SUBCATEGORY = {
     StallClass.FETCH: "instruction fetch",
     StallClass.PIPE_BUSY: "pipeline contention",
     StallClass.NOT_SELECTED: "scheduler contention",
+    StallClass.OCCUPANCY_LIMITED: "occupancy limited",
 }
 
 
@@ -195,7 +220,24 @@ class BlameAttributor:
         self._occupancy_blame(result)
         self._sync_resource_blame(result)
         self._scheduler_contention_blame(result)
+        self._occupancy_limited_blame(result)
         return result
+
+    def _occupancy_limited_blame(self, result: BlameResult) -> None:
+        """Surface failed-latency-hiding events as a typed evidence channel
+        naming the stalled consumer, its producer, and the hidden/exposed
+        split (only present under a multi-wave OccupancyModel)."""
+        pressure = getattr(self.profile, "occupancy_pressure", None)
+        if pressure is None:
+            return
+        for ev in getattr(pressure, "events", []):
+            w = ev.get("weight", 1.0)
+            result.occupancy_limited.append(OccupancyLimitedBlame(
+                consumer=ev["consumer"], blocker=ev.get("blocker") or "",
+                queue=ev.get("queue", 0), stall_class=ev["stall_class"],
+                hidden_cycles=ev["hidden_cycles"] * w,
+                exposed_cycles=ev["exposed_cycles"] * w))
+        result.occupancy_limited.sort(key=lambda b: -b.cycles)
 
     def _scheduler_contention_blame(self, result: BlameResult) -> None:
         """Surface issue-port arbitration events as a typed evidence

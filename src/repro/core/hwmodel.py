@@ -75,6 +75,62 @@ class IssueModel:
 SINGLE_ISSUE = IssueModel(queues=1, width=1, policy="round_robin")
 
 
+#: Residency limiters an :class:`OccupancyModel` can declare — the
+#: vendor-specific budget that bounds resident waves per issue queue.
+OCCUPANCY_LIMITERS: Tuple[str, ...] = (
+    "none",             # single resident wave (no hiding beyond async retire)
+    "register_file",    # NVIDIA-style: register allocation caps warps/SM
+    "wavefront_slots",  # AMD-style: wave slots per SIMD (VGPR/LDS budget)
+    "thread_slots",     # Intel-style: hardware threads per Xe vector engine
+)
+
+
+@dataclass(frozen=True)
+class OccupancyModel:
+    """Per-vendor wave-residency model (failed-latency-hiding contract).
+
+    ``waves``  — resident waves per issue queue (warps per scheduler on
+                 NVIDIA-class parts, wavefront slots per SIMD on AMD-class
+                 parts, hardware threads per Xe vector engine on
+                 Intel-class parts; 1 = a TPU core's lone program).
+    ``limiter`` — which vendor budget bounds ``waves`` (see
+                 :data:`OCCUPANCY_LIMITERS`); advisory metadata that also
+                 drives vendor-native advisor phrasing.
+    ``window_cycles`` — per-wave cap on banked latency-hiding credit: a
+                 co-resident wave can cover at most this many stall cycles
+                 before it, too, runs out of independent work (the
+                 ILP-per-wave horizon).  Per-vendor divergence knob.
+
+    With ``waves == 1`` the sampler bypasses the occupancy machinery
+    entirely and degenerates *byte-identically* to the single-wave model —
+    the parity anchor for every pre-occupancy golden (same trick as
+    ``IssueModel.ports == 1``).
+    """
+
+    waves: int = 1
+    limiter: str = "none"
+    window_cycles: float = 64.0
+
+    def __post_init__(self) -> None:
+        if self.waves < 1:
+            raise ValueError(f"waves must be >= 1, got {self.waves}")
+        if self.limiter not in OCCUPANCY_LIMITERS:
+            raise ValueError(
+                f"unknown occupancy limiter {self.limiter!r}; known: "
+                f"{OCCUPANCY_LIMITERS}")
+        if self.window_cycles <= 0:
+            raise ValueError(
+                f"window_cycles must be > 0, got {self.window_cycles}")
+
+    @property
+    def multi_wave(self) -> bool:
+        return self.waves > 1
+
+
+#: The degenerate residency model: one wave, no latency-hiding credit.
+SINGLE_WAVE = OccupancyModel(waves=1, limiter="none")
+
+
 @dataclass(frozen=True)
 class HardwareModel:
     name: str
@@ -101,6 +157,11 @@ class HardwareModel:
     # Concurrent issue-queue model driving the multi-stream sampler; the
     # default is the degenerate single in-order stream.
     issue: IssueModel = field(default=SINGLE_ISSUE)
+    # Resident-wave model driving the latency-hiding sampler; the default
+    # is the degenerate single wave (every registered backend keeps this —
+    # native residency lives on `Backend.native_occupancy` and is engaged
+    # via `Backend.with_occupancy()` so plain profiles stay byte-identical).
+    occupancy: OccupancyModel = field(default=SINGLE_WAVE)
 
     @property
     def ici_bw_total(self) -> float:

@@ -50,6 +50,9 @@ class StallClass(enum.Enum):
     FETCH = "fetch"                      # instruction fetch / program order
     PIPE_BUSY = "pipe_busy"              # execution resource busy (throughput bound)
     NOT_SELECTED = "not_selected"        # ready but scheduler picked other work
+    OCCUPANCY_LIMITED = "occupancy_limited"  # latency only partially hidden:
+                                         # too few co-resident waves to cover
+                                         # the remainder (failed latency hiding)
     SELF = "self"                        # self-blame bucket (no surviving edge)
 
 
@@ -353,4 +356,9 @@ STALL_COMPATIBLE_PRODUCERS: Dict[StallClass, Tuple[OpClass, ...]] = {
     # stall self-blames into the scheduler-contention evidence channel).
     StallClass.NOT_SELECTED: (),
     StallClass.PIPE_BUSY: (),
+    # Occupancy-limited stall is a property of the wave residency the
+    # kernel achieved, not of any producer: the latency-hiding budget ran
+    # out, so the exposed remainder self-blames into the occupancy
+    # evidence channel.
+    StallClass.OCCUPANCY_LIMITED: (),
 }

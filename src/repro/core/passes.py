@@ -65,6 +65,10 @@ class LeoAnalysis:
     # Per-queue issue-port pressure (IssuePressureReport) from the
     # sampler's multi-stream issue model; None for measured profiles.
     issue_pressure: Optional[Any] = None
+    # Per-queue latency-hiding pressure (OccupancyPressureReport) from the
+    # sampler's multi-wave occupancy model; None for measured profiles and
+    # for W=1 runs.
+    occupancy_pressure: Optional[Any] = None
 
     @property
     def estimated_step_seconds(self) -> float:
@@ -167,7 +171,9 @@ class AnalysisContext:
             analysis_seconds=analysis_seconds, backend=self.backend,
             pass_seconds={s.name: s.seconds for s in self.pass_stats},
             sync_pressure=self.sync_pressure,
-            issue_pressure=getattr(self.profile, "issue_pressure", None))
+            issue_pressure=getattr(self.profile, "issue_pressure", None),
+            occupancy_pressure=getattr(self.profile, "occupancy_pressure",
+                                       None))
 
 
 class PipelineOrderError(ValueError):

@@ -50,10 +50,12 @@ from .isa import EdgeKind, Instruction, OpClass, StallClass
 #: section (ranked what-if-replayed optimization advice from
 #: ``repro.advisor``); v5 added the ``rewrites`` section (applied,
 #: equivalence-checked HLO rewrites from ``repro.rewrite`` with
-#: predicted-vs-realized speedups).  Older payloads are still readable —
-#: ``from_dict`` migrates them with explicit "not recorded" defaults, so
-#: a warm disk cache survives each bump.
-SCHEMA_VERSION = 5
+#: predicted-vs-realized speedups); v6 added the ``occupancy`` section
+#: (wave-residency / failed-latency-hiding pressure from the multi-wave
+#: sampler).  Older payloads are still readable — ``from_dict`` migrates
+#: them with explicit "not recorded" defaults, so a warm disk cache
+#: survives each bump.
+SCHEMA_VERSION = 6
 
 #: Oldest payload generation ``Diagnosis.from_dict`` can migrate forward.
 MIN_SCHEMA_VERSION = 1
@@ -86,6 +88,15 @@ ADVICE_NOT_RECORDED = {
 REWRITES_NOT_RECORDED = {
     "recorded": False,
     "note": "not recorded (rewrite loop not run, or pre-v5 schema payload)",
+}
+
+#: The ``occupancy`` default: migrated pre-v6 payloads AND v6 diagnoses
+#: analyzed at W=1 (``occupancy=False`` requests keep the single-wave
+#: sampler, which carries no residency pressure) — one constant, so both
+#: paths serialize identically (same contract as ``ADVICE_NOT_RECORDED``).
+OCCUPANCY_NOT_RECORDED = {
+    "recorded": False,
+    "note": "not recorded (single-wave analysis, or pre-v6 schema payload)",
 }
 
 
@@ -261,6 +272,13 @@ class Diagnosis:
     # rewrite loop was not run (rewrite=False requests, pre-v5 payloads).
     rewrites: Dict[str, Any] = field(
         default_factory=lambda: dict(REWRITES_NOT_RECORDED))
+    # Wave-residency pressure (schema v6): the OccupancyModel the sampler
+    # ran under (waves/limiter/window), hidden-vs-exposed stall accounting
+    # per issue queue, and failed-latency-hiding (OCCUPANCY_LIMITED) blame
+    # events, or {"recorded": False, ...} for W=1 analyses and pre-v6
+    # payloads.
+    occupancy: Dict[str, Any] = field(
+        default_factory=lambda: dict(OCCUPANCY_NOT_RECORDED))
     schema_version: int = SCHEMA_VERSION
 
     # -- construction ----------------------------------------------------------
@@ -327,6 +345,18 @@ class Diagnosis:
                  "stall_class": b.stall_class, "cycles": b.cycles}
                 for b in getattr(analysis.blame,
                                  "scheduler_contention", [])[:10]]
+        occupancy: Dict[str, Any] = dict(OCCUPANCY_NOT_RECORDED)
+        opressure = getattr(analysis, "occupancy_pressure", None)
+        if opressure is not None:
+            occupancy = {"recorded": True}
+            occupancy.update(opressure.to_dict())
+            occupancy["blame"] = [
+                {"consumer": b.consumer, "blocker": b.blocker,
+                 "queue": b.queue, "stall_class": b.stall_class,
+                 "hidden_cycles": b.hidden_cycles,
+                 "exposed_cycles": b.exposed_cycles}
+                for b in getattr(analysis.blame,
+                                 "occupancy_limited", [])[:10]]
         return cls(
             backend=analysis.hw.name,
             module_name=analysis.module.name,
@@ -356,6 +386,7 @@ class Diagnosis:
                             if backend is not None else None),
             sync_resources=sync_resources,
             issue_pressure=issue_pressure,
+            occupancy=occupancy,
         )
 
     # -- serialization ---------------------------------------------------------
@@ -390,6 +421,7 @@ class Diagnosis:
             "issue_pressure": self.issue_pressure,
             "advice": self.advice,
             "rewrites": self.rewrites,
+            "occupancy": self.occupancy,
             "recommendations": [r.to_dict() for r in self.recommendations],
         })
         return out
@@ -402,10 +434,10 @@ class Diagnosis:
                 f"Diagnosis schema_version {version} outside supported "
                 f"range [{MIN_SCHEMA_VERSION}, {SCHEMA_VERSION}]")
         # Graceful migration: v1 payloads (pre-sync_resources), v2
-        # payloads (pre-issue_pressure), v3 payloads (pre-advice) and v4
-        # payloads (pre-rewrites) read fine — a warm disk cache survives
-        # each schema bump with an explicit "not recorded" default
-        # instead of a reject.
+        # payloads (pre-issue_pressure), v3 payloads (pre-advice), v4
+        # payloads (pre-rewrites) and v5 payloads (pre-occupancy) read
+        # fine — a warm disk cache survives each schema bump with an
+        # explicit "not recorded" default instead of a reject.
         sync_resources = data.get("sync_resources")
         if sync_resources is None:
             sync_resources = dict(SYNC_RESOURCES_NOT_RECORDED)
@@ -418,6 +450,9 @@ class Diagnosis:
         rewrites = data.get("rewrites")
         if rewrites is None:
             rewrites = dict(REWRITES_NOT_RECORDED)
+        occupancy = data.get("occupancy")
+        if occupancy is None:
+            occupancy = dict(OCCUPANCY_NOT_RECORDED)
         cov = data.get("single_dependency_coverage", {})
         return cls(
             backend=data["backend"],
@@ -439,6 +474,7 @@ class Diagnosis:
             issue_pressure=issue_pressure,
             advice=advice,
             rewrites=rewrites,
+            occupancy=occupancy,
             schema_version=SCHEMA_VERSION,
         )
 
@@ -532,6 +568,39 @@ class Diagnosis:
                 + f"; confidence {item.get('confidence', 0.0):.2f})")
         return lines
 
+    def _occupancy_lines(self) -> List[str]:
+        """Human-readable wave-residency lines ("8 resident waves, 54% of
+        hideable latency covered") shared by markdown and LLM views."""
+        occ = self.occupancy or {}
+        if not occ.get("recorded"):
+            return []
+        lines = [
+            f"{occ.get('waves', 1)} resident wave(s) per queue "
+            f"({occ.get('limiter', 'none')}-limited, "
+            f"{occ.get('window_cycles', 0.0):,.0f}-cycle hiding window): "
+            f"{occ.get('hidden_cycles', 0.0):,.0f} stall cycles hidden, "
+            f"{occ.get('exposed_cycles', 0.0):,.0f} exposed "
+            f"({occ.get('hidden_fraction', 0.0):.0%} hidden)"
+        ]
+        if occ.get("limited"):
+            lines.append(
+                f"latency hiding ran out of waves: "
+                f"{occ.get('occupancy_limited_cycles', 0.0):,.0f} "
+                f"occupancy-limited stall cycles leaked through")
+        for q in occ.get("per_queue", []):
+            if q.get("hidden_cycles", 0.0) or q.get("exposed_cycles", 0.0):
+                lines.append(
+                    f"queue {q['queue']}: {q.get('hidden_cycles', 0.0):,.0f}"
+                    f" hidden / {q.get('exposed_cycles', 0.0):,.0f} exposed"
+                    f" cycles")
+        for b in occ.get("blame", [])[:3]:
+            lines.append(
+                f"`{b['consumer']}` outran queue {b['queue']}'s waves "
+                f"waiting on `{b['blocker']}` ({b['stall_class']}: "
+                f"{b['hidden_cycles']:,.0f} hidden, "
+                f"{b['exposed_cycles']:,.0f} exposed cycles)")
+        return lines
+
     def _rewrite_lines(self, top_k: int = 5) -> List[str]:
         """Human-readable applied-rewrite lines ("1.32x realized (100% of
         predicted) CoalesceSyncTags …") shared by the markdown and LLM
@@ -592,6 +661,10 @@ class Diagnosis:
         if issue_lines:
             lines += ["", "## Issue-queue contention", ""]
             lines += [f"- {l}" for l in issue_lines]
+        occ_lines = self._occupancy_lines()
+        if occ_lines:
+            lines += ["", "## Wave occupancy (latency hiding)", ""]
+            lines += [f"- {l}" for l in occ_lines]
         advice_lines = self._advice_lines()
         if advice_lines:
             lines += ["", "## Optimization advice (what-if replayed)", ""]
@@ -640,6 +713,10 @@ class Diagnosis:
             if issue_lines:
                 lines.append("#### Issue-queue (scheduler) contention")
                 lines += [f"- {l}" for l in issue_lines]
+            occ_lines = self._occupancy_lines()
+            if occ_lines:
+                lines.append("#### Wave occupancy (latency hiding)")
+                lines += [f"- {l}" for l in occ_lines]
             lines.append("#### Recommendations")
             for r in self.recommendations:
                 lines.append(f"- [{r.action}] {r.reason} "

@@ -55,12 +55,22 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
-from .hwmodel import HardwareModel, IssueModel, SINGLE_ISSUE
+from .hwmodel import (HardwareModel, IssueModel, OccupancyModel,
+                      SINGLE_ISSUE, SINGLE_WAVE)
 from .isa import Instruction, Module, OpClass, StallClass, SyncKind
 
 #: Issue-port contention events retained per report (aggregate counters
 #: keep accumulating past the cap), mirroring the sync scoreboard's cap.
 _MAX_ISSUE_EVENTS = 64
+
+#: Stall classes co-resident waves can hide (dependence/sync waits — the
+#: machine switches to another wave while this one waits on a producer).
+#: Scheduler-contention classes are NOT hideable: another wave would lose
+#: the same arbitration, so `not_selected`/`pipe_busy` keep their class.
+_HIDEABLE_STALLS = frozenset({
+    StallClass.MEM_DEP, StallClass.EXEC_DEP, StallClass.COLLECTIVE_WAIT,
+    StallClass.SYNC_WAIT,
+})
 
 #: Execution-pipe families used to split port contention into
 #: `pipe_busy` (same pipe saturated) vs `not_selected` (arbitration loss).
@@ -223,6 +233,126 @@ class _IssueState:
             events=list(self.events))
 
 
+@dataclass
+class OccupancyPressureReport:
+    """Per-queue latency-hiding pressure (JSON-pure, Diagnosis-embeddable).
+
+    The wave-residency counterpart of :class:`IssuePressureReport`: per
+    issue queue, how many hideable stall cycles co-resident waves covered
+    (``hidden_cycles``), how many leaked through (``exposed_cycles``), and
+    how many of the leaked cycles were *partially* hidden — the
+    `StallClass.OCCUPANCY_LIMITED` signature of latency hiding that ran
+    out of waves (``occupancy_limited_cycles``) — plus capped per-event
+    detail naming the stalled consumer and its producer.
+    """
+
+    waves: int = 1
+    limiter: str = "none"
+    window_cycles: float = 0.0
+    per_queue: List[Dict[str, Any]] = field(default_factory=list)
+    events: List[Dict[str, Any]] = field(default_factory=list)
+
+    @property
+    def hidden_cycles(self) -> float:
+        return sum(q.get("hidden_cycles", 0.0) for q in self.per_queue)
+
+    @property
+    def exposed_cycles(self) -> float:
+        return sum(q.get("exposed_cycles", 0.0) for q in self.per_queue)
+
+    @property
+    def occupancy_limited_cycles(self) -> float:
+        return sum(q.get("occupancy_limited_cycles", 0.0)
+                   for q in self.per_queue)
+
+    @property
+    def hidden_fraction(self) -> float:
+        """Fraction of hideable stall cycles co-resident waves covered."""
+        total = self.hidden_cycles + self.exposed_cycles
+        return self.hidden_cycles / total if total > 0 else 0.0
+
+    @property
+    def limited(self) -> bool:
+        """True when latency hiding ran out of waves mid-stall."""
+        return self.occupancy_limited_cycles > 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "waves": self.waves,
+            "limiter": self.limiter,
+            "window_cycles": self.window_cycles,
+            "limited": self.limited,
+            "hidden_cycles": self.hidden_cycles,
+            "exposed_cycles": self.exposed_cycles,
+            "occupancy_limited_cycles": self.occupancy_limited_cycles,
+            "hidden_fraction": self.hidden_fraction,
+            "per_queue": self.per_queue,
+            "events": self.events,
+        }
+
+
+class _OccState:
+    """Mutable per-run collector behind an :class:`OccupancyPressureReport`.
+
+    Credit-based analytical hiding: every issued instruction banks
+    ``(W-1) * issue_cost`` cycles of co-resident-wave issue capacity on its
+    queue (capped at ``(W-1) * window_cycles`` — each sibling wave only has
+    so much independent work), and a hideable stall first drains that bank
+    before charging the machine.  Single-pass, so native-W analysis costs
+    the same as the W=1 sampler.
+    """
+
+    def __init__(self, occ: OccupancyModel, queues: int):
+        self.occ = occ
+        self.queues = queues
+        self.credit = [0.0] * queues
+        self.hidden = [0.0] * queues
+        self.exposed = [0.0] * queues
+        self.limited = [0.0] * queues
+        self.events: List[Dict[str, Any]] = []
+        self._cap = (occ.waves - 1) * occ.window_cycles
+
+    def note_issue(self, queue: int, cost: float) -> None:
+        if cost <= 0:
+            return
+        self.credit[queue] = min(
+            self.credit[queue] + (self.occ.waves - 1) * cost, self._cap)
+
+    def absorb(self, queue: int, stall: float, weight: float, consumer: str,
+               blocker: Optional[str], cls: StallClass,
+               at: float) -> Tuple[float, float]:
+        """Drain hiding credit against one stall; returns (hidden, exposed)
+        in unweighted cycles."""
+        hidden = min(stall, self.credit[queue])
+        self.credit[queue] -= hidden
+        exposed = stall - hidden
+        self.hidden[queue] += hidden * weight
+        self.exposed[queue] += exposed * weight
+        if hidden > 0 and exposed > 0:
+            # partial hiding: the OCCUPANCY_LIMITED signature
+            self.limited[queue] += exposed * weight
+            if len(self.events) < _MAX_ISSUE_EVENTS:
+                self.events.append({
+                    "consumer": consumer, "blocker": blocker or "",
+                    "queue": queue, "stall_class": cls.value,
+                    "hidden_cycles": hidden, "exposed_cycles": exposed,
+                    "at": at, "weight": weight,
+                })
+        return hidden, exposed
+
+    def report(self) -> OccupancyPressureReport:
+        return OccupancyPressureReport(
+            waves=self.occ.waves, limiter=self.occ.limiter,
+            window_cycles=self.occ.window_cycles,
+            per_queue=[{
+                "queue": i,
+                "hidden_cycles": self.hidden[i],
+                "exposed_cycles": self.exposed[i],
+                "occupancy_limited_cycles": self.limited[i],
+            } for i in range(self.queues)],
+            events=list(self.events))
+
+
 class _Ports:
     """Issue slots of one simulated computation activation: K queues of
     `width` slots each, every slot tracking when it frees and what
@@ -272,6 +402,11 @@ class StallProfile:
     # Per-queue issue-port pressure (IssuePressureReport) when produced by
     # the virtual sampler; None for measured profiles.
     issue_pressure: Optional[object] = None
+    # Per-queue latency-hiding pressure (OccupancyPressureReport) when the
+    # profile was produced under a multi-wave OccupancyModel; None for
+    # measured profiles and for W=1 runs (keeping single-wave profile
+    # fingerprints byte-identical to the pre-occupancy sampler).
+    occupancy_pressure: Optional[object] = None
     # (SyncKind, computation, tag) -> concrete resource instance actually
     # assigned by the sampler's scoreboard; consumed by the sync_edges
     # pass so static edge annotations name the same hardware the dynamic
@@ -309,6 +444,8 @@ class VirtualSampler:
         self.hw = hw
         self.issue: IssueModel = getattr(hw, "issue", SINGLE_ISSUE) \
             or SINGLE_ISSUE
+        self.occupancy: OccupancyModel = getattr(hw, "occupancy",
+                                                 SINGLE_WAVE) or SINGLE_WAVE
         # Optional backend SyncModel (duck-typed to avoid an import cycle
         # with repro.core.backends).  Two behaviors: the async_collectives
         # knob (vendors whose collectives block the issuing queue, e.g.
@@ -325,8 +462,13 @@ class VirtualSampler:
                 and getattr(sync, "pools", ()):
             self.scoreboard = sync.scoreboard(
                 realloc_cycles=getattr(hw, "sync_realloc_cycles", 0.0),
-                queues=self.issue.queues)
+                queues=self.issue.queues, waves=self.occupancy.waves)
         self._istate = _IssueState(self.issue)
+        # Latency-hiding credit tracker; None at W=1 so the single-wave
+        # path is bit-for-bit the pre-occupancy sampler.
+        self._wavestate: Optional[_OccState] = (
+            _OccState(self.occupancy, self.issue.queues)
+            if self.occupancy.multi_wave else None)
         self._assignment: Dict[Tuple[SyncKind, str, str], str] = {}
 
     # -- public ---------------------------------------------------------------
@@ -336,6 +478,17 @@ class VirtualSampler:
         entry = self.module.entry_computation
         makespan = self._simulate(entry, 0.0, {}, 1.0, profile, depth=0,
                                   board=self.scoreboard)
+        if self._wavestate is not None:
+            # Multi-wave makespan: hidden stall cycles are covered by
+            # co-resident wave issue, so they compress the critical path —
+            # floored by raw/W (waves can at best W-fold overlap the
+            # program) and by the busiest queue's issue occupancy (work
+            # that must be issued cannot be hidden).
+            occ_report = self._wavestate.report()
+            profile.occupancy_pressure = occ_report
+            busy_floor = max(self._istate.busy_cycles, default=0.0)
+            makespan = max(makespan - occ_report.hidden_cycles,
+                           makespan / self.occupancy.waves, busy_floor)
         profile.makespan_cycles = makespan
         if self.scoreboard is not None:
             profile.sync_pressure = self.scoreboard.report()
@@ -387,12 +540,22 @@ class VirtualSampler:
             data_stall = max(0.0, ready - pf)
             port_stall = max(0.0, pf - ready) if multi else 0.0
             res_stall = issue_at - data_ready
-            rec.total_samples += mult * (data_stall + port_stall + res_stall
-                                         + issue_cost)
+            wstate = self._wavestate
             if data_stall > 0:
                 cls = classify_blocker(instr, blocker)
-                rec.add_stall(cls, mult * data_stall,
-                              blocker.qualified_name if blocker else None)
+                bname = blocker.qualified_name if blocker else None
+                if wstate is not None and cls in _HIDEABLE_STALLS:
+                    # Co-resident waves absorb the wait from banked issue
+                    # credit; a fully-hidden stall charges nothing, a
+                    # partially-hidden one reclassifies its exposed tail
+                    # as OCCUPANCY_LIMITED (hiding ran out of waves).
+                    hidden, data_stall = wstate.absorb(
+                        qidx, data_stall, mult, consumer=q, blocker=bname,
+                        cls=cls, at=ready)
+                    if hidden > 0 and data_stall > 0:
+                        cls = StallClass.OCCUPANCY_LIMITED
+                if data_stall > 0:
+                    rec.add_stall(cls, mult * data_stall, bname)
             if port_stall > 0:
                 pipe = pipe_of(instr)
                 occupant = ports.occupant[slot]
@@ -403,8 +566,17 @@ class VirtualSampler:
                                              consumer=q, holder=occupant,
                                              pipe=pipe, at=ready)
             if res_stall > 0:
-                rec.add_stall(StallClass.SYNC_RESOURCE, mult * res_stall,
-                              res_blocker)
+                res_cls = StallClass.SYNC_RESOURCE
+                if wstate is not None:
+                    hidden, res_stall = wstate.absorb(
+                        qidx, res_stall, mult, consumer=q,
+                        blocker=res_blocker, cls=res_cls, at=data_ready)
+                    if hidden > 0 and res_stall > 0:
+                        res_cls = StallClass.OCCUPANCY_LIMITED
+                if res_stall > 0:
+                    rec.add_stall(res_cls, mult * res_stall, res_blocker)
+            rec.total_samples += mult * (data_stall + port_stall + res_stall
+                                         + issue_cost)
             completion = issue_at + self._latency_cycles(instr, env, profile,
                                                          issue_at, mult,
                                                          depth)
@@ -417,10 +589,15 @@ class VirtualSampler:
             # occupancy, so the wrapper records an issue event but no
             # busy cycles (otherwise per-queue busy would double-count
             # and could exceed the makespan on loop-heavy programs).
-            self._istate.note_issue(
-                qidx, mult,
-                0.0 if instr.opcode in ("while", "call", "conditional")
-                else issue_cost)
+            queue_cost = 0.0 \
+                if instr.opcode in ("while", "call", "conditional") \
+                else issue_cost
+            self._istate.note_issue(qidx, mult, queue_cost)
+            if wstate is not None:
+                # Each issued instruction banks (W-1) x its cost of
+                # co-resident-wave issue capacity on this queue (control
+                # ops excluded: their bodies' instructions already bank).
+                wstate.note_issue(qidx, queue_cost)
             end = max(end, issue_at + issue_cost)
         return end
 
@@ -549,7 +726,10 @@ class VirtualSampler:
         warm = StallProfile(hw_name=self.hw.name, clock_hz=self.hw.clock_hz)
         env_a: Dict[str, float] = {}
         saved_istate = self._istate
+        saved_wavestate = self._wavestate
         self._istate = _IssueState(self.issue)
+        if saved_wavestate is not None:
+            self._wavestate = _OccState(self.occupancy, self.issue.queues)
         try:
             end_a = self._simulate(body, issue_at, env_a, 1.0, warm,
                                    depth + 1, loop_ctx={},
@@ -557,6 +737,7 @@ class VirtualSampler:
                                    else None)
         finally:
             self._istate = saved_istate
+            self._wavestate = saved_wavestate
         makespan_a = max(end_a - issue_at, 1.0)
 
         # Steady-state loop context: slot value available at

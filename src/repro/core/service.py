@@ -31,6 +31,7 @@ import hashlib
 import json
 import threading
 import time
+import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
@@ -59,30 +60,175 @@ from .session import LeoSession, ModuleLike, SessionStats
 #: answer advice-free requests (or vice versa).
 #: v5: the optional rewrite loop (equivalence-checked HLO rewrites with
 #: realized speedups) rides the diagnosis; the `rewrite` knob joins the
-#: key list under the same never-alias rule as `advise`.
+#: key list under the same never-alias rule as `advise`.  The `occupancy`
+#: knob (schema v6) deliberately did NOT bump this: it appends to the key
+#: only when engaged (see `DiagnoseOptions.key_suffix`), so every
+#: pre-existing knob combination keeps its byte-identical key and a warm
+#: cache_dir survives the upgrade.
 DIAGNOSIS_KEY_VERSION = 5
 
 
-@dataclass
+#: (caller, kwarg-names) pairs already warned about — legacy boolean
+#: kwargs warn once per call site shape, not once per request.
+_LEGACY_KWARG_WARNED: set = set()
+
+
+def _warn_legacy_kwargs(caller: str, given: Dict[str, Any]) -> None:
+    key = (caller, tuple(sorted(given)))
+    if key in _LEGACY_KWARG_WARNED:
+        return
+    _LEGACY_KWARG_WARNED.add(key)
+    args = ", ".join(f"{k}={v!r}" for k, v in sorted(given.items()))
+    warnings.warn(
+        f"{caller}: keyword(s) {', '.join(sorted(given))} are deprecated; "
+        f"pass options=DiagnoseOptions({args}) instead "
+        f"(the keywords are removed two minor releases after v6)",
+        DeprecationWarning, stacklevel=4)
+
+
+@dataclass(frozen=True)
+class DiagnoseOptions:
+    """The typed request surface: every analysis knob in one frozen,
+    hashable value — the single source of truth for both the diagnosis
+    cache key (:meth:`key_fields` / :meth:`key_suffix`) and the wire
+    fields (:meth:`wire_fields`), so the service, the HTTP client, and
+    the queue protocol can never drift apart one boolean at a time.
+
+    ``occupancy=True`` engages the backend's native wave-residency model
+    (:meth:`Backend.with_occupancy`): stalls that co-resident waves
+    would cover are hidden, the remainder reclassifies as
+    ``OCCUPANCY_LIMITED``, and the Diagnosis gains its schema-v6
+    ``occupancy`` section.  Single-wave parts (TPUs) analyze
+    identically with the knob on — there is no residency to raise."""
+
+    n_chains: int = 5
+    prune_unexecuted: bool = True
+    advise: bool = False
+    rewrite: bool = False
+    occupancy: bool = False
+
+    def validate(self) -> None:
+        if self.n_chains < 1:
+            raise ValueError("n_chains must be >= 1")
+
+    def key_fields(self) -> List[Any]:
+        """The cache-key components every generation has carried, in
+        their historical order — byte-identity with pre-v6 keys."""
+        return [self.n_chains, self.prune_unexecuted, self.advise,
+                self.rewrite]
+
+    def key_suffix(self) -> List[Any]:
+        """Appended after the version/pipeline tail, and ONLY when
+        non-default: a default-occupancy request hashes exactly like a
+        pre-v6 one, so warm disk caches keep answering."""
+        return ["occupancy"] if self.occupancy else []
+
+    def wire_fields(self) -> Dict[str, Any]:
+        """The flat request-dict fields (an ``occupancy``-unaware peer's
+        ``from_dict`` ignores the new key)."""
+        return {
+            "n_chains": self.n_chains,
+            "prune_unexecuted": self.prune_unexecuted,
+            "advise": self.advise,
+            "rewrite": self.rewrite,
+            "occupancy": self.occupancy,
+        }
+
+    @classmethod
+    def from_wire(cls, data: Dict[str, Any]) -> "DiagnoseOptions":
+        return cls(
+            n_chains=data.get("n_chains", 5),
+            prune_unexecuted=data.get("prune_unexecuted", True),
+            advise=data.get("advise", False),
+            rewrite=data.get("rewrite", False),
+            occupancy=data.get("occupancy", False),
+        )
+
+    @classmethod
+    def coalesce(cls, options: Optional["DiagnoseOptions"], caller: str,
+                 **legacy: Any) -> "DiagnoseOptions":
+        """Resolve an ``options=`` argument against the deprecated
+        boolean kwargs: explicit options win (mixing raises), legacy
+        kwargs warn once per call-site shape and build an equivalent
+        options value, neither yields the defaults."""
+        given = {k: v for k, v in legacy.items() if v is not None}
+        if options is not None:
+            if given:
+                raise TypeError(
+                    f"{caller}: pass options=DiagnoseOptions(...) or the "
+                    f"deprecated keyword(s) {sorted(given)}, not both")
+            return options
+        if not given:
+            return cls()
+        _warn_legacy_kwargs(caller, given)
+        return cls(**given)
+
+
+@dataclass(init=False)
 class AnalyzeRequest:
     """One unit of service work: a program plus analysis knobs.
 
     ``backend=None`` targets the service default; set ``backends`` to fan
     the same program across several vendor models in one request (the
-    Observation-1 shape).  The schema is versioned and JSON-round-trips,
-    so requests can ride a queue between processes.
+    Observation-1 shape).  The analysis knobs live in one typed
+    :class:`DiagnoseOptions` value (``options=``); the old flat boolean
+    kwargs still construct (warn-once shims) and the wire layout keeps
+    the flat fields, so queued requests and older peers interoperate.
+    The schema is versioned and JSON-round-trips, so requests can ride a
+    queue between processes.
     """
 
     hlo_text: str = ""
     backend: Optional[str] = None
     backends: Optional[List[str]] = None
     hints: Optional[Dict[str, Any]] = None
-    n_chains: int = 5
-    prune_unexecuted: bool = True
-    advise: bool = False
-    rewrite: bool = False
+    options: DiagnoseOptions = field(default_factory=DiagnoseOptions)
     request_id: Optional[str] = None
     schema_version: int = SCHEMA_VERSION
+
+    def __init__(self, hlo_text: str = "",
+                 backend: Optional[str] = None,
+                 backends: Optional[List[str]] = None,
+                 hints: Optional[Dict[str, Any]] = None,
+                 options: Optional[DiagnoseOptions] = None,
+                 request_id: Optional[str] = None,
+                 schema_version: int = SCHEMA_VERSION, *,
+                 n_chains: Optional[int] = None,
+                 prune_unexecuted: Optional[bool] = None,
+                 advise: Optional[bool] = None,
+                 rewrite: Optional[bool] = None,
+                 occupancy: Optional[bool] = None):
+        self.hlo_text = hlo_text
+        self.backend = backend
+        self.backends = backends
+        self.hints = hints
+        self.options = DiagnoseOptions.coalesce(
+            options, "AnalyzeRequest", n_chains=n_chains,
+            prune_unexecuted=prune_unexecuted, advise=advise,
+            rewrite=rewrite, occupancy=occupancy)
+        self.request_id = request_id
+        self.schema_version = schema_version
+
+    # legacy read accessors: the knobs' single home is .options
+    @property
+    def n_chains(self) -> int:
+        return self.options.n_chains
+
+    @property
+    def prune_unexecuted(self) -> bool:
+        return self.options.prune_unexecuted
+
+    @property
+    def advise(self) -> bool:
+        return self.options.advise
+
+    @property
+    def rewrite(self) -> bool:
+        return self.options.rewrite
+
+    @property
+    def occupancy(self) -> bool:
+        return self.options.occupancy
 
     def validate(self) -> None:
         if not self.hlo_text:
@@ -94,22 +240,19 @@ class AnalyzeRequest:
             raise ValueError(
                 f"AnalyzeRequest schema_version {self.schema_version} != "
                 f"{SCHEMA_VERSION}")
-        if self.n_chains < 1:
-            raise ValueError("n_chains must be >= 1")
+        self.options.validate()
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        out: Dict[str, Any] = {
             "schema_version": self.schema_version,
             "hlo_text": self.hlo_text,
             "backend": self.backend,
             "backends": self.backends,
             "hints": self.hints,
-            "n_chains": self.n_chains,
-            "prune_unexecuted": self.prune_unexecuted,
-            "advise": self.advise,
-            "rewrite": self.rewrite,
-            "request_id": self.request_id,
         }
+        out.update(self.options.wire_fields())
+        out["request_id"] = self.request_id
+        return out
 
     @classmethod
     def from_dict(cls, data: Dict[str, Any]) -> "AnalyzeRequest":
@@ -118,10 +261,7 @@ class AnalyzeRequest:
             backend=data.get("backend"),
             backends=data.get("backends"),
             hints=data.get("hints"),
-            n_chains=data.get("n_chains", 5),
-            prune_unexecuted=data.get("prune_unexecuted", True),
-            advise=data.get("advise", False),
-            rewrite=data.get("rewrite", False),
+            options=DiagnoseOptions.from_wire(data),
             request_id=data.get("request_id"),
             schema_version=data.get("schema_version", 0),
         )
@@ -318,10 +458,8 @@ class LeoService:
     # -- diagnosis surface (serializable Diagnosis out) ------------------------
 
     def _diagnosis_key(self, program: ModuleLike, backend: Any,
-                       hints: Optional[dict], n_chains: int,
-                       prune_unexecuted: bool,
-                       advise: bool = False,
-                       rewrite: bool = False) -> Optional[str]:
+                       hints: Optional[dict],
+                       options: DiagnoseOptions) -> Optional[str]:
         """Content key for a diagnosis; None for identity-keyed Modules
         (not content-hashable, so never disk-cached).
 
@@ -335,7 +473,11 @@ class LeoService:
         their semantics change.  The Diagnosis SCHEMA_VERSION is
         deliberately NOT part of the key: schema-only bumps keep hitting
         the old artifacts, which ``Diagnosis.from_dict`` migrates forward
-        (a warm cache survives a schema bump)."""
+        (a warm cache survives a schema bump).  ``options`` supplies its
+        own components (:meth:`DiagnoseOptions.key_fields` in the
+        historical positions, :meth:`~DiagnoseOptions.key_suffix` only
+        when non-default), so every pre-v6 knob combination hashes
+        byte-identically to what it always did."""
         if isinstance(program, Module):
             return None
         mkey = self.session.module_key(program, hints)
@@ -345,40 +487,60 @@ class LeoService:
                            backend.sync))
         h = hashlib.sha256()
         h.update(json.dumps([
-            mkey, backend_fp, n_chains, prune_unexecuted, advise, rewrite,
+            mkey, backend_fp, *options.key_fields(),
             DIAGNOSIS_KEY_VERSION,
             self.session.pipeline.names,
+            *options.key_suffix(),
         ]).encode())
         return h.hexdigest()
 
     def diagnose(self, program: ModuleLike, *,
                  backend: Optional[BackendLike] = None,
                  hints: Optional[dict] = None,
-                 n_chains: int = 5,
-                 prune_unexecuted: bool = True,
-                 advise: bool = False,
-                 rewrite: bool = False) -> Diagnosis:
+                 options: Optional[DiagnoseOptions] = None,
+                 n_chains: Optional[int] = None,
+                 prune_unexecuted: Optional[bool] = None,
+                 advise: Optional[bool] = None,
+                 rewrite: Optional[bool] = None,
+                 occupancy: Optional[bool] = None) -> Diagnosis:
         """Analyze and return the serializable :class:`Diagnosis`,
         consulting the memory and disk diagnosis tiers first — a warm
         disk tier answers without parsing or running the pipeline.
+        Analysis knobs ride one typed ``options=DiagnoseOptions(...)``
+        value; the flat keyword forms still work as warn-once
+        deprecation shims.
 
-        ``advise=True`` additionally runs the what-if advisor
+        ``options.advise`` additionally runs the what-if advisor
         (:mod:`repro.advisor`) on cache misses and lands ranked,
         speedup-priced advice in the Diagnosis ``advice`` section
         (schema v4); advice-carrying artifacts are cached under their
         own key, so toggling the knob never serves a stale shape.
 
-        ``rewrite=True`` closes the loop (:mod:`repro.rewrite`): the
+        ``options.rewrite`` closes the loop (:mod:`repro.rewrite`): the
         top advice is lowered to equivalence-checked HLO rewrites, each
         rewritten text is re-analyzed through this same session, and the
         ``rewrites`` section (schema v5) lands predicted-vs-realized
         speedups.  The advisor runs internally either way, but the
-        ``advice`` section is only recorded when ``advise=True`` — the
-        two knobs key the caches independently."""
+        ``advice`` section is only recorded when ``advise`` is set — the
+        two knobs key the caches independently.
+
+        ``options.occupancy`` engages the backend's native wave-residency
+        model (``backend.with_occupancy()``) before analysis: the
+        Diagnosis gains the schema-v6 ``occupancy`` section, and the
+        derived ``@wN-...`` backend name keys the session caches so an
+        occupancy analysis can never alias a plain one.  Single-wave
+        parts analyze unchanged (they have no residency to raise)."""
+        opts = DiagnoseOptions.coalesce(
+            options, "LeoService.diagnose", n_chains=n_chains,
+            prune_unexecuted=prune_unexecuted, advise=advise,
+            rewrite=rewrite, occupancy=occupancy)
+        opts.validate()
         b = resolve_backend(backend) if backend is not None \
             else self.session.default_backend
-        dkey = self._diagnosis_key(program, b, hints, n_chains,
-                                   prune_unexecuted, advise, rewrite)
+        if opts.occupancy and b.native_occupancy.multi_wave \
+                and not b.occupancy.multi_wave:
+            b = b.with_occupancy()
+        dkey = self._diagnosis_key(program, b, hints, opts)
         # cached entries are returned as copies: a caller mutating its
         # Diagnosis (e.g. inserting a pipeline-level recommendation, as
         # benchmarks/harness.py does) must not poison the shared cache
@@ -417,13 +579,13 @@ class LeoService:
             self.parse(program, hints=hints)
         t0 = time.monotonic()
         analysis = self.session.analyze(
-            program, backend=b, hints=hints, n_chains=n_chains,
-            prune_unexecuted=prune_unexecuted)
+            program, backend=b, hints=hints, n_chains=opts.n_chains,
+            prune_unexecuted=opts.prune_unexecuted)
         if self._m_pipeline is not None:
             self._m_pipeline.observe(time.monotonic() - t0)
-        diag = Diagnosis.from_analysis(analysis, max_chains=n_chains)
+        diag = Diagnosis.from_analysis(analysis, max_chains=opts.n_chains)
         rep = None
-        if advise or rewrite:
+        if opts.advise or opts.rewrite:
             # lazy: repro.advisor imports core, so core must not import
             # it at module scope (and advice-free serving never pays it)
             from ..advisor import Advisor, advice_section
@@ -433,9 +595,9 @@ class LeoService:
                 profile=analysis.profile, blame=analysis.blame)
             if self._m_advisor is not None:
                 self._m_advisor.observe(time.monotonic() - t1)
-            if advise:
+            if opts.advise:
                 diag.advice = advice_section(rep.advice, rep)
-        if rewrite:
+        if opts.rewrite:
             # same lazy-import rule as the advisor; verification samples
             # the module re-parsed from each rewritten text directly
             # (identical makespan to a full session.analyze by the
@@ -467,14 +629,10 @@ class LeoService:
         if request.backends is not None:
             return self.diagnose_fanout(
                 request.hlo_text, backends=request.backends,
-                hints=request.hints, n_chains=request.n_chains,
-                prune_unexecuted=request.prune_unexecuted,
-                advise=request.advise, rewrite=request.rewrite)
+                hints=request.hints, options=request.options)
         return self.diagnose(
             request.hlo_text, backend=request.backend, hints=request.hints,
-            n_chains=request.n_chains,
-            prune_unexecuted=request.prune_unexecuted,
-            advise=request.advise, rewrite=request.rewrite)
+            options=request.options)
 
     def submit_async(self, request: AnalyzeRequest) -> Future:
         """`submit` as a Future — the non-blocking shape a queue-driven
@@ -503,13 +661,23 @@ class LeoService:
     def diagnose_fanout(self, program: ModuleLike, *,
                         backends: Optional[Sequence[BackendLike]] = None,
                         hints: Optional[dict] = None,
-                        **kwargs: Any) -> Dict[str, Diagnosis]:
+                        options: Optional[DiagnoseOptions] = None,
+                        n_chains: Optional[int] = None,
+                        prune_unexecuted: Optional[bool] = None,
+                        advise: Optional[bool] = None,
+                        rewrite: Optional[bool] = None,
+                        occupancy: Optional[bool] = None
+                        ) -> Dict[str, Diagnosis]:
         """``compare_backends`` with serializable results."""
+        opts = DiagnoseOptions.coalesce(
+            options, "LeoService.diagnose_fanout", n_chains=n_chains,
+            prune_unexecuted=prune_unexecuted, advise=advise,
+            rewrite=rewrite, occupancy=occupancy)
         targets = [resolve_backend(b) for b in backends] \
             if backends is not None else self.session.backends
         results = self._fan_out(
             lambda b: self.diagnose(program, backend=b, hints=hints,
-                                    **kwargs), targets)
+                                    options=opts), targets)
         return {b.name: r for b, r in zip(targets, results)}
 
     def __repr__(self) -> str:

@@ -148,6 +148,7 @@ def mutation_space(backend):
         ResizePool,
         ScaleLatency,
         SetIssue,
+        SetOccupancy,
         TreeReduceChain,
     )
     from ..core.hwmodel import ISSUE_POLICIES
@@ -171,6 +172,10 @@ def mutation_space(backend):
             space.append(SetIssue(policy=policy))
     space.append(ScaleLatency(hw_field="hbm_bw", factor=2.0))
     space.append(ScaleLatency(hw_field="dma_setup_cycles", factor=0.5))
+    native = backend.native_occupancy
+    if native.multi_wave:
+        for waves in sorted({native.waves, max(2, native.waves // 2)}):
+            space.append(SetOccupancy(waves=waves))
     return space
 
 

@@ -38,7 +38,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Union
 
 from ..core.report import SCHEMA_VERSION, Diagnosis
-from ..core.service import AnalyzeRequest
+from ..core.service import AnalyzeRequest, DiagnoseOptions
 from .protocol import (
     ProtocolError,
     WireResponse,
@@ -252,18 +252,25 @@ class LeoClient:
                  backend: Optional[str] = None,
                  backends: Optional[Sequence[str]] = None,
                  hints: Optional[Dict[str, Any]] = None,
-                 n_chains: int = 5,
-                 prune_unexecuted: bool = True,
-                 advise: bool = False,
-                 rewrite: bool = False,
+                 options: Optional[DiagnoseOptions] = None,
+                 n_chains: Optional[int] = None,
+                 prune_unexecuted: Optional[bool] = None,
+                 advise: Optional[bool] = None,
+                 rewrite: Optional[bool] = None,
+                 occupancy: Optional[bool] = None,
                  deadline_seconds: Optional[float] = None
                  ) -> Union[Diagnosis, Dict[str, Diagnosis]]:
+        """One-call diagnosis over the wire.  Analysis knobs ride a typed
+        ``options=DiagnoseOptions(...)`` (the flat keywords remain as
+        warn-once deprecation shims), mirroring ``LeoService.diagnose``."""
+        opts = DiagnoseOptions.coalesce(
+            options, "LeoClient.diagnose", n_chains=n_chains,
+            prune_unexecuted=prune_unexecuted, advise=advise,
+            rewrite=rewrite, occupancy=occupancy)
         return self.submit(AnalyzeRequest(
             hlo_text=hlo_text, backend=backend,
             backends=list(backends) if backends is not None else None,
-            hints=hints, n_chains=n_chains,
-            prune_unexecuted=prune_unexecuted, advise=advise,
-            rewrite=rewrite),
+            hints=hints, options=opts),
             deadline_seconds=deadline_seconds)
 
     def diagnose_batch(self, requests: Sequence[AnalyzeRequest], *,

@@ -15,18 +15,19 @@ front-end:
     ``retry_after`` hint, mirrored into the HTTP status / ``Retry-After``
     header by the front-end.
 
-Schema-version negotiation (the v1–v5 ``Diagnosis`` migration, across
+Schema-version negotiation (the v1–v6 ``Diagnosis`` migration, across
 the wire): the client advertises ``accept_schema`` — the newest
 Diagnosis schema generation it understands.  The server answers at
 ``min(SCHEMA_VERSION, accept_schema)``, **downgrading** the payload by
-dropping the sections newer generations added (``rewrites`` for pre-v5,
-``advice`` for pre-v4, ``issue_pressure`` for pre-v3,
-``sync_resources`` for pre-v2) — exactly the inverse of the
-``Diagnosis.from_dict`` forward migration, so:
+dropping the sections newer generations added (``occupancy`` for
+pre-v6, ``rewrites`` for pre-v5, ``advice`` for pre-v4,
+``issue_pressure`` for pre-v3, ``sync_resources`` for pre-v2) —
+exactly the inverse of the ``Diagnosis.from_dict`` forward migration,
+so:
 
-  * an old (v4) client against a v5 server receives a genuine v4 payload
+  * an old (v5) client against a v6 server receives a genuine v5 payload
     its own ``from_dict`` accepts;
-  * a new (v5) client against an old (v4) server receives a v4 payload
+  * a new (v6) client against an old (v5) server receives a v5 payload
     that its ``from_dict`` migrates forward with explicit "not recorded"
     defaults.
 
@@ -110,6 +111,8 @@ def downgrade_diagnosis_dict(data: Dict[str, Any],
     if target == current:
         return data
     out = dict(data)
+    if target < 6:
+        out.pop("occupancy", None)
     if target < 5:
         out.pop("rewrites", None)
     if target < 4:

@@ -103,7 +103,8 @@ class TestAdviceDivergenceRegression:
         tops = {b: reports[b].top.rule for b in DIVERGING_VENDORS}
         assert len(set(tops.values())) == 3, tops
         assert tops["nvidia_gh200"] == "batch_sync_allocations"
-        assert tops["amd_mi300a"] == "coalesce_outstanding_waits"
+        # PR-9: wave residency (occupancy) is AMD's decisive lever now
+        assert tops["amd_mi300a"] == "raise_occupancy"
         assert tops["intel_pvc"] == "expose_ilp_tree_reduce"
 
     @pytest.mark.parametrize("backend", DIVERGING_VENDORS)
@@ -115,7 +116,10 @@ class TestAdviceDivergenceRegression:
 
     def test_phrasing_is_vendor_native(self, reports):
         assert "bar.sync" in reports["nvidia_gh200"].top.description
-        assert "s_waitcnt" in reports["amd_mi300a"].top.description
+        # PR-9: AMD's top advice is the residency knob, phrased in
+        # waves-per-EU / VGPR terms rather than s_waitcnt terms.
+        assert "waves-per-eu" in \
+            reports["amd_mi300a"].top.description.lower()
         assert "SBID" in reports["intel_pvc"].top.description
 
     @pytest.mark.parametrize("backend", sorted(GOLDEN_BACKENDS))

@@ -1,0 +1,217 @@
+"""Occupancy-divergence regression (the PR-9 ISSUE golden).
+
+The paper's latency-hiding story, cross-vendor: engaging the *same*
+"raise occupancy" counterfactual on the same latency-bound copy storm
+yields a **different verdict per GPU vendor**, because residency interacts
+with each vendor's sync-resource scoping:
+
+* **AMD-class** — *decisive*: 4 wavefront slots per SIMD hide the vmcnt
+  waits behind co-resident wavefronts; queue-scoped waitcnt counters mean
+  extra waves add no serialization;
+* **NVIDIA-class** — *harmful*: 8 resident warps share the device-scope
+  named barriers, so the storm's sync traffic serializes 8 ways deeper
+  than the hiding reclaims (more residency, slower program);
+* **Intel-class** — *marginal*: only 2 hardware threads per Xe vector
+  engine; hiding credit runs dry almost immediately
+  (``OCCUPANCY_LIMITED`` dominates the reclassified waits);
+* **TPU generations** — *single-wave*: no residency knob exists; the
+  engaged profile is byte-identical to the plain one.
+
+Pinned in ``tests/goldens/occupancy_divergence.json``: the native
+residency descriptor, the modeled speedup of engaging it, the
+hidden/exposed cycle split, and the per-vendor verdict for every golden
+backend.  Any drift in the credit model, wave-scoreboard sharing, or a
+vendor's occupancy constants shows up as a precise per-backend diff.
+
+Regenerate after an intentional recalibration (the CI golden-drift gate
+runs exactly this and fails on an uncommitted diff):
+
+  PYTHONPATH=src python tests/test_occupancy_divergence.py
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import StallClass, get_backend, parse_hlo
+from repro.core.sampler import VirtualSampler
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "occupancy_divergence.json")
+
+GOLDEN_BACKENDS = ("amd_mi300a", "intel_pvc", "nvidia_gh200",
+                   "tpu_v4", "tpu_v5e", "tpu_v5p")
+
+#: The per-vendor verdicts the paper's cross-vendor story requires.
+EXPECTED_VERDICTS = {
+    "amd_mi300a": "decisive",
+    "nvidia_gh200": "harmful",
+    "intel_pvc": "marginal",
+    "tpu_v4": "single_wave",
+    "tpu_v5e": "single_wave",
+    "tpu_v5p": "single_wave",
+}
+
+#: The fixture: 12 concurrent async copies feeding one serial reduction —
+#: latency-bound enough that hiding matters, sync-heavy enough that
+#: NVIDIA's device-scope barriers punish extra residency.
+N_COPIES = 12
+
+
+def _load_goldens() -> dict:
+    if not os.path.exists(GOLDEN_PATH):
+        return {}
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+GOLDENS = _load_goldens()
+
+
+def _storm_module():
+    from repro.launch.analysis_server import copy_storm_hlo
+    return parse_hlo(copy_storm_hlo(N_COPIES))
+
+
+def _run(module, backend):
+    return VirtualSampler(module, backend.hw, sync=backend.sync).run()
+
+
+def _verdict(speedup: float, multi_wave: bool) -> str:
+    if not multi_wave:
+        return "single_wave"
+    if speedup < 1.0:
+        return "harmful"
+    if speedup >= 1.2:
+        return "decisive"
+    return "marginal"
+
+
+def _snapshot(module, backend) -> dict:
+    """The golden's per-backend record: what engaging native residency
+    does to this workload on this part."""
+    plain = _run(module, backend)
+    native = backend.native_occupancy
+    if not native.multi_wave:
+        return {
+            "waves": native.waves,
+            "limiter": native.limiter,
+            "residency_speedup": 1.0,
+            "verdict": "single_wave",
+        }
+    engaged = _run(module, backend.with_occupancy())
+    rep = engaged.occupancy_pressure
+    limited = sum(
+        r.stall_breakdown.get(StallClass.OCCUPANCY_LIMITED, 0.0)
+        for r in engaged.records.values())
+    speedup = plain.makespan_cycles / engaged.makespan_cycles
+    return {
+        "waves": native.waves,
+        "limiter": native.limiter,
+        "window_cycles": native.window_cycles,
+        "residency_speedup": speedup,
+        "hidden_cycles": rep.hidden_cycles,
+        "exposed_cycles": rep.exposed_cycles,
+        "hidden_fraction": rep.hidden_fraction,
+        "occupancy_limited_cycles": limited,
+        "verdict": _verdict(speedup, True),
+    }
+
+
+@pytest.fixture(scope="module")
+def snapshots():
+    module = _storm_module()
+    return {name: _snapshot(module, get_backend(name))
+            for name in GOLDEN_BACKENDS}
+
+
+class TestOccupancyDivergenceRegression:
+    def test_golden_file_covers_every_backend(self):
+        assert sorted(k for k in GOLDENS if not k.startswith("_")) == \
+            sorted(GOLDEN_BACKENDS)
+
+    @pytest.mark.parametrize("backend", sorted(GOLDEN_BACKENDS))
+    def test_backend_snapshot(self, snapshots, backend):
+        got, want = dict(snapshots[backend]), dict(GOLDENS[backend])
+        for field in ("residency_speedup", "hidden_cycles",
+                      "exposed_cycles", "hidden_fraction",
+                      "occupancy_limited_cycles", "window_cycles"):
+            if field in want:
+                assert got.pop(field) == \
+                    pytest.approx(want.pop(field), rel=1e-9), field
+        assert got == want
+
+    def test_three_vendors_get_three_different_verdicts(self, snapshots):
+        """ISSUE acceptance: a different occupancy verdict per GPU vendor
+        at native W on the same latency-bound fixture."""
+        verdicts = {b: snapshots[b]["verdict"] for b in GOLDEN_BACKENDS}
+        assert verdicts == EXPECTED_VERDICTS
+        gpu = {verdicts[b] for b in
+               ("nvidia_gh200", "amd_mi300a", "intel_pvc")}
+        assert len(gpu) == 3
+
+    def test_amd_hiding_is_decisive(self, snapshots):
+        snap = snapshots["amd_mi300a"]
+        assert snap["residency_speedup"] >= 1.5
+        assert snap["hidden_cycles"] > 0
+
+    def test_nvidia_residency_backfires(self, snapshots):
+        """Device-scope barrier sharing costs more than hiding reclaims:
+        the engaged makespan is LONGER than the single-wave one."""
+        assert snapshots["nvidia_gh200"]["residency_speedup"] < 1.0
+
+    def test_intel_hiding_credit_runs_dry(self, snapshots):
+        """Two resident threads barely dent the waits: the engaged run
+        reclassifies stalls as occupancy_limited rather than hiding
+        them."""
+        snap = snapshots["intel_pvc"]
+        assert 1.0 <= snap["residency_speedup"] < 1.2
+        assert snap["occupancy_limited_cycles"] > 0
+
+    @pytest.mark.parametrize("backend", sorted(GOLDEN_BACKENDS))
+    def test_w1_parity_anchor(self, backend):
+        """The golden's precondition: a W=1 occupancy variant reproduces
+        the plain profile byte-identically on the golden workload."""
+        from repro.core import OccupancyModel
+        module = _storm_module()
+        base = get_backend(backend)
+        plain = _run(module, base)
+        w1 = base.with_occupancy(OccupancyModel(waves=1, limiter="none"))
+        gated = _run(module, w1)
+        assert gated.makespan_cycles == plain.makespan_cycles
+        for q, rec in plain.records.items():
+            r2 = gated.records[q]
+            assert (rec.total_samples, rec.latency_samples,
+                    rec.stall_breakdown) == \
+                (r2.total_samples, r2.latency_samples, r2.stall_breakdown)
+
+
+def regenerate() -> dict:
+    """Recompute the golden (recalibration/drift-gate entry point);
+    writes ``tests/goldens/occupancy_divergence.json`` in place."""
+    module = _storm_module()
+    goldens = {
+        "_comment": "Occupancy-divergence golden (12-copy storm, one "
+                    "serial reduction): the verdict on engaging native "
+                    "wave residency, per backend; regenerate with "
+                    "`PYTHONPATH=src python "
+                    "tests/test_occupancy_divergence.py` after an "
+                    "intentional recalibration (the CI golden-drift gate "
+                    "runs exactly that and fails on an uncommitted "
+                    "diff).",
+    }
+    for name in sorted(GOLDEN_BACKENDS):
+        goldens[name] = _snapshot(module, get_backend(name))
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(goldens, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return goldens
+
+
+if __name__ == "__main__":
+    regenerated = regenerate()
+    for name in sorted(k for k in regenerated if not k.startswith("_")):
+        snap = regenerated[name]
+        print(f"{name}: {snap['verdict']} "
+              f"({snap['residency_speedup']:.3f}x at W={snap['waves']})")
+    print(f"wrote {GOLDEN_PATH}")

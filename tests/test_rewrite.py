@@ -422,7 +422,7 @@ class TestServiceRewrite:
         svc = LeoService()
         diag = svc.diagnose(_storm_hlo(12), backend="nvidia_gh200",
                             advise=True, rewrite=True)
-        assert diag.schema_version == 5
+        assert diag.schema_version == 6
         assert diag.rewrites["recorded"] is True
         assert diag.rewrites["count"] >= 1
         assert diag.advice["recorded"] is True

@@ -333,6 +333,43 @@ class TestCrossVersion:
         assert migrated.to_json() == \
             Diagnosis.from_dict(v4_by_hand).to_json()
 
+    def test_v5_client_against_v6_server(self, copystorm_hlo_text):
+        """PR-9 ISSUE acceptance: a v5-era client asking a v6 server for
+        occupancy-engaged diagnoses gets a genuine v5 payload (the
+        ``occupancy`` section is dropped on the wire, ``rewrites`` and
+        ``advice`` kept), and migrating it forward equals the hand-built
+        v5 migration fixture recipe."""
+        from repro.core import DiagnoseOptions
+        from repro.core.report import OCCUPANCY_NOT_RECORDED
+        svc = LeoService()
+        opts = DiagnoseOptions(advise=True, occupancy=True)
+        with LeoHttpd(service=svc, port=0, slots=2) as app:
+            with LeoClient(port=app.port, accept_schema=5) as client:
+                resp = client.submit_wire(AnalyzeRequest(
+                    hlo_text=copystorm_hlo_text, backend="amd_mi300a",
+                    options=opts))
+            inproc = svc.submit(AnalyzeRequest(
+                hlo_text=copystorm_hlo_text, backend="amd_mi300a",
+                options=opts))
+        assert inproc.occupancy["recorded"] is True
+        assert resp.schema_version == 5
+        # a genuine v5 payload on the wire: the v6-only section is gone,
+        # every v5 section survives
+        assert "occupancy" not in resp.payload
+        assert "advice" in resp.payload and "rewrites" in resp.payload
+        assert resp.payload["schema_version"] == 5
+        migrated = resp.result()
+        assert migrated.schema_version == SCHEMA_VERSION
+        assert migrated.occupancy == OCCUPANCY_NOT_RECORDED
+        assert migrated.advice == inproc.advice
+        # identical to migrating the same v5 payload built by hand from
+        # the in-process diagnosis (the test_syncmodel fixture recipe)
+        v5_by_hand = inproc.to_dict()
+        del v5_by_hand["occupancy"]
+        v5_by_hand["schema_version"] = 5
+        assert migrated.to_json() == \
+            Diagnosis.from_dict(v5_by_hand).to_json()
+
     def test_future_client_negotiates_down(self, async_hlo_text):
         """A newer-generation client (accept_schema > server's) just gets
         the server's newest — negotiation is min(), both directions."""

@@ -434,3 +434,126 @@ class TestConcurrentFanout:
                                          hints={"total_devices": 8}))
         assert Diagnosis.from_json(diag.to_json()) == diag
         assert diag.vendor == "amd"
+
+
+# --------------------------------------------------------------------------
+# DiagnoseOptions: the typed request surface (PR-9 api_redesign satellite).
+# --------------------------------------------------------------------------
+
+class TestDiagnoseOptions:
+    def test_defaults_match_legacy_kwarg_defaults(self):
+        from repro.core import DiagnoseOptions
+        o = DiagnoseOptions()
+        assert (o.n_chains, o.prune_unexecuted, o.advise, o.rewrite,
+                o.occupancy) == (5, True, False, False, False)
+
+    def test_validation(self):
+        from repro.core import DiagnoseOptions
+        with pytest.raises(ValueError, match="n_chains"):
+            DiagnoseOptions(n_chains=0).validate()
+
+    def test_cache_keys_byte_identical_to_pre_v6_layout(self,
+                                                        async_hlo_text):
+        """ISSUE acceptance: for every pre-existing knob combination the
+        options-built key equals the historical hash byte for byte — a
+        warm disk cache survives the API redesign.  The formula below is
+        the pre-v6 layout, frozen on purpose: if this test breaks, warm
+        caches broke."""
+        import hashlib
+        from itertools import product
+        from repro.core import DiagnoseOptions, get_backend
+        from repro.core.service import DIAGNOSIS_KEY_VERSION
+        svc = LeoService()
+        backend = get_backend("tpu_v5e")
+        hints = {"total_devices": 8}
+        mkey = svc.session.module_key(async_hlo_text, hints)
+        backend_fp = repr((backend.name, backend.vendor, backend.hw,
+                           sorted((k.value, v) for k, v
+                                  in backend.stall_taxonomy.items()),
+                           backend.sync))
+        for n_chains, prune, advise, rewrite in product(
+                (1, 5), (True, False), (True, False), (True, False)):
+            want = hashlib.sha256(json.dumps([
+                mkey, backend_fp, n_chains, prune, advise, rewrite,
+                DIAGNOSIS_KEY_VERSION, svc.session.pipeline.names,
+            ]).encode()).hexdigest()
+            opts = DiagnoseOptions(n_chains=n_chains,
+                                   prune_unexecuted=prune,
+                                   advise=advise, rewrite=rewrite)
+            got = svc._diagnosis_key(async_hlo_text, backend, hints, opts)
+            assert got == want, opts
+
+    def test_occupancy_gets_its_own_key(self, async_hlo_text):
+        from repro.core import DiagnoseOptions, get_backend
+        svc = LeoService()
+        backend = get_backend("nvidia_gh200")
+        plain = svc._diagnosis_key(async_hlo_text, backend, None,
+                                   DiagnoseOptions())
+        occ = svc._diagnosis_key(async_hlo_text, backend, None,
+                                 DiagnoseOptions(occupancy=True))
+        assert plain != occ
+
+    def test_legacy_kwargs_warn_once_and_build_same_options(
+            self, async_hlo_text):
+        import warnings as _warnings
+        from repro.core import service as service_mod
+        from repro.core import DiagnoseOptions
+        service_mod._LEGACY_KWARG_WARNED.clear()
+        svc = LeoService()
+        with _warnings.catch_warnings(record=True) as caught:
+            _warnings.simplefilter("always")
+            d1 = svc.diagnose(async_hlo_text, backend="tpu_v5e",
+                              n_chains=3)
+            svc.diagnose(async_hlo_text, backend="tpu_v5e", n_chains=3)
+        deprecations = [w for w in caught
+                        if issubclass(w.category, DeprecationWarning)]
+        assert len(deprecations) == 1          # warned once per site shape
+        assert "DiagnoseOptions" in str(deprecations[0].message)
+        d2 = svc.diagnose(async_hlo_text, backend="tpu_v5e",
+                          options=DiagnoseOptions(n_chains=3))
+        assert d1 == d2
+        assert svc.diagnosis_hits >= 2         # same cache key all along
+
+    def test_mixing_options_and_legacy_kwargs_raises(self,
+                                                     async_hlo_text):
+        from repro.core import DiagnoseOptions
+        svc = LeoService()
+        with pytest.raises(TypeError, match="options"):
+            svc.diagnose(async_hlo_text, backend="tpu_v5e",
+                         options=DiagnoseOptions(), advise=True)
+
+    def test_request_wire_layout_stays_flat(self, async_hlo_text):
+        """An occupancy-unaware peer reads the same flat request dict it
+        always did; the new key is additive."""
+        from repro.core import DiagnoseOptions
+        req = AnalyzeRequest(hlo_text=async_hlo_text, backend="tpu_v5e",
+                             options=DiagnoseOptions(advise=True,
+                                                     occupancy=True))
+        data = json.loads(req.to_json())
+        assert data["advise"] is True and data["occupancy"] is True
+        assert "options" not in data           # no nested object on wire
+        again = AnalyzeRequest.from_json(req.to_json())
+        assert again.options == req.options
+        # a pre-v6 peer's dict (no occupancy key) parses with default off
+        del data["occupancy"]
+        legacy = AnalyzeRequest.from_dict(data)
+        assert legacy.options.occupancy is False
+
+    def test_v6_round_trip_with_occupancy(self, async_hlo_text):
+        """ISSUE acceptance: v6 `from_json(to_json(d)) == d` with the
+        occupancy section recorded."""
+        from repro.core import DiagnoseOptions
+        svc = LeoService()
+        diag = svc.diagnose(async_hlo_text, backend="amd_mi300a",
+                            hints={"total_devices": 8},
+                            options=DiagnoseOptions(occupancy=True))
+        assert diag.schema_version == SCHEMA_VERSION == 6
+        assert diag.occupancy["recorded"] is True
+        assert diag.occupancy["waves"] == 4
+        assert Diagnosis.from_json(diag.to_json()) == diag
+        # single-wave parts take the knob without engaging anything
+        tpu = svc.diagnose(async_hlo_text, backend="tpu_v5e",
+                           hints={"total_devices": 8},
+                           options=DiagnoseOptions(occupancy=True))
+        assert tpu.occupancy["recorded"] is False
+        assert Diagnosis.from_json(tpu.to_json()) == tpu

@@ -15,6 +15,7 @@ import json
 import pytest
 
 from repro.core import (
+    DiagnoseOptions,
     Diagnosis,
     DiskCache,
     LeoService,
@@ -524,7 +525,7 @@ ENTRY %main.1 (arg0: f32[64,64]) -> f32[64,64] {
 
 
 # --------------------------------------------------------------------------
-# Schema v1-v4 -> v5 migration (PR-3/PR-4/PR-7/PR-8 satellites).
+# Schema v1-v5 -> v6 migration (PR-3/PR-4/PR-7/PR-8/PR-9 satellites).
 # --------------------------------------------------------------------------
 
 class TestSchemaMigration:
@@ -532,7 +533,9 @@ class TestSchemaMigration:
         an = analyze_hlo(async_hlo_text, hw="tpu_v5e",
                          hints={"total_devices": 8})
         data = Diagnosis.from_analysis(an).to_dict()
-        del data["rewrites"]                # pre-v5
+        del data["occupancy"]               # pre-v6
+        if version < 5:
+            del data["rewrites"]            # pre-v5
         if version < 4:
             del data["advice"]              # pre-v4
         if version < 3:
@@ -544,7 +547,7 @@ class TestSchemaMigration:
 
     def test_v1_payload_migrates_with_not_recorded_defaults(self,
                                                             async_hlo_text):
-        assert SCHEMA_VERSION == 5 and MIN_SCHEMA_VERSION == 1
+        assert SCHEMA_VERSION == 6 and MIN_SCHEMA_VERSION == 1
         diag = Diagnosis.from_dict(self._payload(async_hlo_text, 1))
         assert diag.schema_version == SCHEMA_VERSION
         assert diag.sync_resources["recorded"] is False
@@ -555,7 +558,9 @@ class TestSchemaMigration:
         assert "not recorded" in diag.advice["note"]
         assert diag.rewrites["recorded"] is False
         assert "not recorded" in diag.rewrites["note"]
-        # migrated payloads re-serialize as v5 and round-trip exactly
+        assert diag.occupancy["recorded"] is False
+        assert "not recorded" in diag.occupancy["note"]
+        # migrated payloads re-serialize as v6 and round-trip exactly
         assert Diagnosis.from_json(diag.to_json()) == diag
 
     def test_v2_payload_keeps_sync_resources_and_defaults_issue(
@@ -597,6 +602,20 @@ class TestSchemaMigration:
         assert diag.issue_pressure["recorded"] is True
         assert diag.rewrites["recorded"] is False
         assert "not recorded" in diag.rewrites["note"]
+        assert diag.occupancy["recorded"] is False
+        assert Diagnosis.from_json(diag.to_json()) == diag
+
+    def test_v5_payload_keeps_rewrites_and_defaults_occupancy(
+            self, async_hlo_text):
+        """PR-9 ISSUE acceptance: v5 payloads (pre-occupancy) migrate
+        into v6 with an explicit "not recorded" occupancy default; every
+        recorded section survives untouched."""
+        diag = Diagnosis.from_dict(self._payload(async_hlo_text, 5))
+        assert diag.schema_version == SCHEMA_VERSION
+        assert diag.sync_resources["recorded"] is True
+        assert diag.issue_pressure["recorded"] is True
+        assert diag.occupancy["recorded"] is False
+        assert "not recorded" in diag.occupancy["note"]
         assert Diagnosis.from_json(diag.to_json()) == diag
 
     def test_newer_schema_still_rejected(self, async_hlo_text):
@@ -608,7 +627,7 @@ class TestSchemaMigration:
         with pytest.raises(ValueError, match="schema_version"):
             Diagnosis.from_dict(data)
 
-    @pytest.mark.parametrize("version", [1, 2, 3, 4])
+    @pytest.mark.parametrize("version", [1, 2, 3, 4, 5])
     def test_service_serves_migrated_artifact_without_pipeline(
             self, async_hlo_text, tmp_path, version):
         """The diagnosis disk key deliberately excludes SCHEMA_VERSION, so
@@ -618,7 +637,7 @@ class TestSchemaMigration:
         svc = LeoService(cache_dir=str(tmp_path))
         backend = svc.session.default_backend
         dkey = svc._diagnosis_key(async_hlo_text, backend,
-                                  {"total_devices": 8}, 5, True)
+                                  {"total_devices": 8}, DiagnoseOptions())
         path = svc.disk_cache._path("diagnoses", dkey, ".json.gz")
         import os
         os.makedirs(os.path.dirname(path), exist_ok=True)
