@@ -16,15 +16,19 @@
 #                       cross-vendor blame divergence and the wide-ops
 #                       issue-contention divergence)
 #   make bench-smoke  — the perf-trajectory lane: trimmed deterministic
-#                       benchmark subset; emits BENCH_pr8.json, appends
+#                       benchmark subset; emits BENCH_pr10.json, appends
 #                       the run's geomeans to the committed
 #                       benchmarks/trajectory.json, and fails on >10%
 #                       geomean-step-time regression vs the committed
 #                       benchmarks/baseline.json, on the advisor
 #                       overhead gate (advise=True < 3x the plain
 #                       pipeline per GPU backend), on the rewrite
-#                       overhead gate (rewrite=True < 4x), or on the
-#                       occupancy overhead gate (occupancy=True < 5x)
+#                       overhead gate (rewrite=True < 4x), on the
+#                       occupancy overhead gate (occupancy=True < 5x),
+#                       or on the serving-throughput gate (--workers 4
+#                       must sustain >= 2x the --workers 1 RPS on a
+#                       parse-heavy stream; ratio enforced on >= 4-CPU
+#                       machines, clean SIGTERM drains everywhere)
 #   make advisor-smoke— the what-if advisor lane: the advisor demo's
 #                       three acts (identity replay, replay-priced
 #                       advice, guided-vs-blind search) plus the advisor
@@ -49,7 +53,12 @@
 #                       client demo against it (which must observe a 429
 #                       shed and retry through it), grep /metrics for
 #                       served traffic, then SIGTERM and gate on a clean
-#                       drain
+#                       drain; a second block reruns the demo against a
+#                       `--workers 2` pre-forked pool, SIGKILLs one
+#                       worker mid-run (every request must still
+#                       complete via the client's retry path), gates on
+#                       the supervisor respawning it, and on a rolling
+#                       SIGTERM drain exiting 0
 
 PY := python
 PYTEST_FLAGS := -x -q
@@ -69,7 +78,7 @@ bench:
 	$(PY) -m benchmarks.run
 
 bench-smoke:
-	$(PY) -m benchmarks.bench_smoke --out BENCH_pr9.json
+	$(PY) -m benchmarks.bench_smoke --out BENCH_pr10.json
 
 advisor-smoke:
 	$(PY) examples/advisor_demo.py --smoke
@@ -126,4 +135,31 @@ net-smoke:
 	fi; \
 	kill -TERM $$SRV; \
 	wait $$SRV || { echo "server did not drain cleanly"; status=1; }; \
+	rm -rf $$WORK; exit $$status
+	@echo "-- pool lane: --workers 2, SIGKILL one worker mid-run --"
+	WORK=$$(mktemp -d); status=0; \
+	$(PY) -m repro.launch.analysis_server --serve 0 --workers 2 \
+		--slots 2 --max-queue 16 --cache-dir $$WORK/cache \
+		--port-file $$WORK/port & \
+	SRV=$$!; \
+	for i in $$(seq 1 300); do [ -s $$WORK/port ] && break; \
+		sleep 0.1; done; \
+	if [ ! -s $$WORK/port ]; then echo "pool never bound"; \
+		kill $$SRV 2>/dev/null; rm -rf $$WORK; exit 1; fi; \
+	$(PY) examples/analysis_client_demo.py --port $$(cat $$WORK/port) \
+		--rounds 6 & \
+	DEMO=$$!; \
+	sleep 1; \
+	WPID=$$(pgrep -P $$SRV | head -1); \
+	if [ -n "$$WPID" ]; then kill -9 $$WPID; \
+		else echo "no worker to kill"; status=1; fi; \
+	wait $$DEMO \
+		|| { echo "client saw errors across the worker kill"; status=1; }; \
+	for i in $$(seq 1 150); do \
+		[ $$(pgrep -P $$SRV | wc -l) -ge 2 ] && break; sleep 0.1; done; \
+	[ $$(pgrep -P $$SRV | wc -l) -ge 2 ] \
+		|| { echo "supervisor did not respawn the killed worker"; \
+		status=1; }; \
+	kill -TERM $$SRV; \
+	wait $$SRV || { echo "pool did not drain cleanly"; status=1; }; \
 	rm -rf $$WORK; exit $$status

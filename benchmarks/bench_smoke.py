@@ -32,7 +32,18 @@ The PR-9 occupancy lane rides the same protocol: a fresh-cache
 re-run under the part's native wave residency — must stay under 5x the
 plain pipeline per GPU backend.
 
-Each run also appends its geomeans to the committed
+The PR-10 serving lane measures multi-process throughput end-to-end: a
+parse-heavy stream (every request a distinct trace, no shared cache
+dir, so each pays a full HLO parse) is driven over the wire against
+``analysis_server --serve 0 --workers 1`` and ``--workers 4``, and the
+lane records RPS plus p50/p99 of the server-reported ``queue_seconds``
+for both.  On machines with >= 4 CPUs (CI's runners) the 4-worker
+server must sustain >= 2x the single-worker RPS — the pre-fork pool's
+reason to exist is that parsing is GIL-bound in one process;
+single-core machines record the measurement but skip the ratio gate.
+Both servers must also drain to exit 0 on SIGTERM (gated everywhere).
+
+Each run also appends its geomeans (and serving RPS) to the committed
 ``benchmarks/trajectory.json`` (keyed by the output artifact name, so
 re-running the same PR's lane replaces, never duplicates) — the
 cross-PR perf trajectory in one diffable file.
@@ -53,7 +64,7 @@ from typing import Dict, List
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 DEFAULT_TRAJECTORY = os.path.join(os.path.dirname(__file__),
                                   "trajectory.json")
-DEFAULT_OUTPUT = "BENCH_pr9.json"
+DEFAULT_OUTPUT = "BENCH_pr10.json"
 DEFAULT_THRESHOLD = 0.10
 
 #: Advisor-lane gate: advise=True must cost < this multiple of the plain
@@ -72,6 +83,17 @@ REWRITE_GATE = 4.0
 #: must cost < this multiple of the plain pipeline on the same cold
 #: cache (ISSUE PR-9 satellite).
 OCCUPANCY_GATE = 5.0
+
+#: Serving-lane gate: ``--workers 4`` must sustain >= this multiple of
+#: the ``--workers 1`` RPS on the parse-heavy stream (ISSUE PR-10
+#: tentpole).  Only enforced with >= SERVING_MIN_CPUS cores — on fewer
+#: there is no parallelism for the pool to unlock, so the lane records
+#: the measurement without gating the ratio.
+SERVING_GATE = 2.0
+SERVING_MIN_CPUS = 4
+SERVING_WORKER_COUNTS = (1, 4)
+SERVING_REQUESTS = 48
+SERVING_CONCURRENCY = 8
 
 
 #: Table-IV workloads in the trimmed subset (one per family).
@@ -261,6 +283,144 @@ def occupancy_lane() -> Dict[str, object]:
     }
 
 
+def _drive_serving(workers: int, traces: List[str]) -> Dict[str, object]:
+    """Spawn ``analysis_server --serve 0 --workers N`` as a subprocess,
+    drive the parse-heavy stream at ``SERVING_CONCURRENCY`` over the
+    wire, then SIGTERM and record the drain exit code.
+
+    ``traces[0]`` is an unmeasured warmup (opens the client's pooled
+    connections and proves the listener is answering); the measured
+    stream is ``traces[1:]`` — all distinct, so with no ``--cache-dir``
+    every request pays a full HLO parse on whichever worker accepted
+    it."""
+    import shutil
+    import signal
+    import subprocess
+    import tempfile
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.core.service import AnalyzeRequest
+    from repro.serve import LeoClient
+
+    workdir = tempfile.mkdtemp(prefix="leo-bench-serve-")
+    port_file = os.path.join(workdir, "port")
+    src_dir = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.analysis_server",
+         "--serve", "0", "--workers", str(workers), "--slots", "2",
+         "--max-queue", "64", "--port-file", port_file],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    queue_seconds: List[float] = []
+    try:
+        deadline = time.time() + 120.0
+        while not os.path.exists(port_file):
+            if proc.poll() is not None:
+                raise RuntimeError(
+                    f"serving-lane server (--workers {workers}) exited "
+                    f"rc={proc.returncode} before binding")
+            if time.time() > deadline:
+                raise RuntimeError("serving-lane server never wrote its "
+                                   "port file")
+            time.sleep(0.1)
+        with open(port_file) as f:
+            port = int(f.read().strip())
+        reqs = [AnalyzeRequest(hlo_text=t, backend="tpu_v5e")
+                for t in traces[1:]]
+        with LeoClient(host="127.0.0.1", port=port, max_retries=8,
+                       backoff_base_seconds=0.05) as client:
+            if not client.wait_ready(60.0):
+                raise RuntimeError("serving-lane server never became "
+                                   "ready")
+            client.diagnose(traces[0], backend="tpu_v5e")     # warmup
+            t0 = time.perf_counter()
+            with ThreadPoolExecutor(
+                    max_workers=SERVING_CONCURRENCY) as pool:
+                futs = [pool.submit(client.submit_wire, r) for r in reqs]
+                for fut in futs:
+                    resp = fut.result()
+                    q = (getattr(resp, "timing", None)
+                         or {}).get("queue_seconds")
+                    if isinstance(q, (int, float)):
+                        queue_seconds.append(float(q))
+            wall = time.perf_counter() - t0
+        proc.send_signal(signal.SIGTERM)
+        drain_rc = proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    queue_seconds.sort()
+
+    def pct(p: float) -> float:
+        if not queue_seconds:
+            return float("nan")
+        return queue_seconds[min(len(queue_seconds) - 1,
+                                 int(p * len(queue_seconds)))]
+
+    return {
+        "workers": workers,
+        "requests": len(reqs),
+        "wall_seconds": wall,
+        "rps": len(reqs) / wall,
+        "queue_seconds_p50": pct(0.50),
+        "queue_seconds_p99": pct(0.99),
+        "drain_exit_code": drain_rc,
+    }
+
+
+def serving_lane() -> Dict[str, object]:
+    """Multi-process serving throughput: the parse-heavy stream against
+    ``--workers 1`` vs ``--workers 4`` (ISSUE PR-10).  Ratio-gated only
+    on machines with >= ``SERVING_MIN_CPUS`` cores; clean SIGTERM drains
+    are gated everywhere."""
+    from repro.launch.analysis_server import demo_hlo
+
+    cpu_count = os.cpu_count() or 1
+    traces = [demo_hlo(seed=1000 + i, n=96 + 8 * (i % 6), trips=4)
+              for i in range(SERVING_REQUESTS + 1)]
+    per_workers = {str(w): _drive_serving(w, traces)
+                   for w in SERVING_WORKER_COUNTS}
+    lo = per_workers[str(min(SERVING_WORKER_COUNTS))]
+    hi = per_workers[str(max(SERVING_WORKER_COUNTS))]
+    return {
+        "workload": f"{SERVING_REQUESTS} distinct demo_async traces "
+                    f"(every request parses), concurrency "
+                    f"{SERVING_CONCURRENCY}",
+        "gate_rps_ratio": SERVING_GATE,
+        "gated": cpu_count >= SERVING_MIN_CPUS,
+        "cpu_count": cpu_count,
+        "per_workers": per_workers,
+        "rps_speedup": hi["rps"] / lo["rps"],
+    }
+
+
+def serving_failures(lane: Dict[str, object]) -> List[str]:
+    failures = []
+    for key, row in sorted(lane["per_workers"].items()):
+        if row["drain_exit_code"] != 0:
+            failures.append(
+                f"--workers {key}: SIGTERM drain exited "
+                f"{row['drain_exit_code']} (expected 0) — did a worker "
+                f"miss the rolling drain deadline?")
+    if lane["gated"] and lane["rps_speedup"] < lane["gate_rps_ratio"]:
+        hi = str(max(SERVING_WORKER_COUNTS))
+        lo = str(min(SERVING_WORKER_COUNTS))
+        failures.append(
+            f"--workers {hi} sustained only {lane['rps_speedup']:.2f}x "
+            f"the --workers {lo} RPS "
+            f"({lane['per_workers'][hi]['rps']:.1f} vs "
+            f"{lane['per_workers'][lo]['rps']:.1f}) on "
+            f"{lane['cpu_count']} CPUs; the serving lane gates at >= "
+            f"{lane['gate_rps_ratio']:.1f}x — is the pool actually "
+            f"forking, or are workers serializing on a shared lock?")
+    return failures
+
+
 def occupancy_failures(lane: Dict[str, object]) -> List[str]:
     failures = []
     for backend, row in sorted(lane["per_backend"].items()):
@@ -299,11 +459,17 @@ def append_trajectory(result: Dict[str, object], output: str,
             trajectory = json.load(f)
     name = os.path.basename(output)
     runs = [r for r in trajectory.get("runs", []) if r.get("name") != name]
-    runs.append({
+    entry = {
         "name": name,
         "geomean_estimated_step_seconds":
             dict(result["geomean_estimated_step_seconds"]),
-    })
+    }
+    serving = result.get("serving")
+    if serving:
+        entry["serving_rps"] = {
+            w: row["rps"] for w, row in serving["per_workers"].items()}
+        entry["serving_rps_speedup"] = serving["rps_speedup"]
+    runs.append(entry)
     trajectory["runs"] = runs
     with open(path, "w") as f:
         json.dump(trajectory, f, indent=2, sort_keys=True)
@@ -381,6 +547,7 @@ def main(argv=None) -> int:
     result["advisor"] = advisor_lane()
     result["rewrite"] = rewrite_lane()
     result["occupancy"] = occupancy_lane()
+    result["serving"] = serving_lane()
     with open(args.output, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -408,6 +575,17 @@ def main(argv=None) -> int:
               f"{row['occupancy_seconds']:.4f}s "
               f"vs pipeline {row['pipeline_seconds']:.4f}s "
               f"({row['ratio']:.2f}x, gate <{occ['gate_ratio']:.0f}x)")
+    srv = result["serving"]
+    for key, row in sorted(srv["per_workers"].items()):
+        print(f"  serving --workers {key}: {row['rps']:.1f} req/s, "
+              f"queue p50 {row['queue_seconds_p50'] * 1e3:.1f}ms "
+              f"p99 {row['queue_seconds_p99'] * 1e3:.1f}ms, "
+              f"drain rc={row['drain_exit_code']}")
+    gate_note = ("gate >= {:.1f}x".format(srv["gate_rps_ratio"])
+                 if srv["gated"] else
+                 "ratio informational on {} CPU(s)".format(
+                     srv["cpu_count"]))
+    print(f"  serving speedup {srv['rps_speedup']:.2f}x ({gate_note})")
 
     adv_failures = advisor_failures(adv)
     if adv_failures:
@@ -424,7 +602,12 @@ def main(argv=None) -> int:
         print("OCCUPANCY OVERHEAD GATE failed:", file=sys.stderr)
         for msg in occ_failures:
             print(f"  {msg}", file=sys.stderr)
-    adv_failures = adv_failures + rw_failures + occ_failures
+    srv_failures = serving_failures(srv)
+    if srv_failures:
+        print("SERVING THROUGHPUT GATE failed:", file=sys.stderr)
+        for msg in srv_failures:
+            print(f"  {msg}", file=sys.stderr)
+    adv_failures = adv_failures + rw_failures + occ_failures + srv_failures
 
     if args.update_baseline:
         with open(args.baseline, "w") as f:
@@ -446,12 +629,15 @@ def main(argv=None) -> int:
             print(f"  {msg}", file=sys.stderr)
     if failures or adv_failures:
         return 1
+    srv_gate = (f"serving speedup >= {srv['gate_rps_ratio']:.1f}x"
+                if srv["gated"] else "serving drains clean "
+                "(ratio ungated on this core count)")
     print(f"perf gate OK: no backend >"
           f"{args.threshold * 100:.0f}% slower than baseline; advisor "
           f"overhead < {adv['gate_ratio']:.0f}x, rewrite overhead "
           f"< {rw['gate_ratio']:.0f}x, and occupancy overhead "
           f"< {occ['gate_ratio']:.0f}x on all "
-          f"{len(adv['per_backend'])} GPU backends")
+          f"{len(adv['per_backend'])} GPU backends; {srv_gate}")
     return 0
 
 

@@ -42,6 +42,11 @@ def main(argv=None) -> int:
     ap.add_argument("--port", type=int, required=True)
     ap.add_argument("--requests", type=int, default=6,
                     help="burst size for the batch phase")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="repeat the pipelined burst this many times "
+                         "(the worker-kill CI lane SIGKILLs a pool "
+                         "worker mid-run; every request must still "
+                         "complete via the client's retry path)")
     ap.add_argument("--expect-shed", action="store_true",
                     help="fail unless the burst observes >= 1 429 shed "
                          "(run the server with --slots 1 --max-queue 1)")
@@ -68,12 +73,20 @@ def main(argv=None) -> int:
         for name, d in sorted(fanout.items()):
             print(f"[{name}] est {d.estimated_step_seconds*1e6:.1f} us")
 
-        print(f"-- pipelined burst of {args.requests} --")
+        print(f"-- pipelined burst of {args.requests} "
+              f"x {args.rounds} round(s) --")
         reqs = [AnalyzeRequest(hlo_text=traces[i % len(traces)],
                                backend="tpu_v5e")
                 for i in range(args.requests)]
-        diags = client.diagnose_batch(reqs, max_connections=args.requests)
-        print(f"{len(diags)} diagnoses back; client stats: {client.stats}")
+        for round_no in range(args.rounds):
+            diags = client.diagnose_batch(reqs,
+                                          max_connections=args.requests)
+            if len(diags) != len(reqs):
+                print(f"round {round_no}: {len(diags)}/{len(reqs)} "
+                      f"diagnoses back", file=sys.stderr)
+                return 1
+        print(f"{args.rounds * len(reqs)} diagnoses back; "
+              f"client stats: {client.stats}")
 
         sheds = client.stats["sheds_seen"]
         if args.expect_shed and sheds == 0:

@@ -23,6 +23,18 @@ writes — ``<outdir>/.leo_cache`` no longer grows without bound.
 Writes are atomic (tmp file + ``os.replace``), so concurrent writers on
 the same key are safe: last writer wins with an intact artifact either
 way.
+
+Multi-process serving (``repro.serve.pool``) shares one cache root
+across N forked workers, which adds two cross-process obligations:
+
+  * sweeps coordinate through an advisory ``flock`` on
+    ``<root>/.sweep.lock`` so only one *process* compacts at a time —
+    an opportunistic sweep that finds the file lock held skips, exactly
+    like the in-process non-blocking path;
+  * the mtime scan and the tmp-file publish tolerate a concurrently
+    exiting/clearing process: paths that vanish between listing and
+    ``stat`` are skipped, and a ``mkstemp`` whose parent directory was
+    just removed recreates it and retries once.
 """
 from __future__ import annotations
 
@@ -36,6 +48,11 @@ import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Iterator, List, MutableMapping, \
     Optional, Tuple
+
+try:                # POSIX only; on other platforms sweeps fall back to
+    import fcntl    # in-process coordination (the threading lock).
+except ImportError:             # pragma: no cover - non-POSIX
+    fcntl = None  # type: ignore[assignment]
 
 #: Bump when the pickled Module layout changes incompatibly; stale
 #: artifacts are treated as misses, never as errors.
@@ -153,6 +170,9 @@ class DiskCache:
         self._counter_lock = threading.Lock()
         self._sweep_lock = threading.Lock()
         self._writes_since_sweep = 0
+        # Cross-process sweep coordination: advisory flock on a lockfile
+        # at the cache root (see module docstring).
+        self._sweep_lock_path = os.path.join(self.root, ".sweep.lock")
 
     def _path(self, kind: str, key: str, ext: str) -> str:
         return os.path.join(self.root, kind, key[:2], f"{key}{ext}")
@@ -164,10 +184,47 @@ class DiskCache:
         except OSError:
             pass
 
+    def _sweep_file_lock(self, blocking: bool) -> Optional[int]:
+        """Acquire the cross-process sweep lock.  Returns an fd to pass
+        to :meth:`_sweep_file_unlock`, ``-1`` when flock is unavailable
+        (non-POSIX: proceed, in-process lock already held), or ``None``
+        when non-blocking and another process holds it."""
+        if fcntl is None:               # pragma: no cover - non-POSIX
+            return -1
+        try:
+            os.makedirs(self.root, exist_ok=True)
+            fd = os.open(self._sweep_lock_path,
+                         os.O_CREAT | os.O_RDWR, 0o644)
+        except OSError:
+            return -1   # can't create the lockfile: sweep uncoordinated
+        flags = fcntl.LOCK_EX if blocking else fcntl.LOCK_EX | fcntl.LOCK_NB
+        try:
+            fcntl.flock(fd, flags)
+        except OSError:
+            os.close(fd)
+            return None
+        return fd
+
+    @staticmethod
+    def _sweep_file_unlock(fd: Optional[int]) -> None:
+        if fd is None or fd < 0:
+            return
+        try:
+            os.close(fd)    # closing the fd releases the flock
+        except OSError:     # pragma: no cover - close on valid fd
+            pass
+
     def _write_atomic(self, path: str, payload: bytes) -> None:
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
+        try:
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       suffix=".tmp")
+        except FileNotFoundError:
+            # A concurrent clear()/eviction removed the freshly created
+            # directory; recreate and retry once.
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(payload)
@@ -252,6 +309,11 @@ class DiskCache:
                     path = os.path.join(dirpath, name)
                     try:
                         st = os.stat(path)
+                    except FileNotFoundError:
+                        # A concurrently-exiting process (its final
+                        # flush-sweep, or a clear()) unlinked the path
+                        # between listing and stat: skip and continue.
+                        continue
                     except OSError:
                         continue
                     out.append((st.st_mtime, st.st_size, path))
@@ -275,10 +337,16 @@ class DiskCache:
         oldest-accessed first.  Safe to call concurrently / cross-process:
         a racing unlink simply counts as someone else's eviction.  With
         ``blocking=False`` (the opportunistic write-path mode), a sweep
-        already in progress is skipped instead of waited on."""
+        already in progress — in this process (threading lock) or in any
+        other process sharing the root (``.sweep.lock`` flock) — is
+        skipped instead of waited on, so only one worker compacts."""
         if self.max_bytes is None and self.ttl_seconds is None:
             return {"evicted": 0, "bytes_freed": 0}
         if not self._sweep_lock.acquire(blocking=blocking):
+            return {"evicted": 0, "bytes_freed": 0, "skipped": 1}
+        lock_fd = self._sweep_file_lock(blocking)
+        if lock_fd is None:
+            self._sweep_lock.release()
             return {"evicted": 0, "bytes_freed": 0, "skipped": 1}
         now = time.time() if now is None else now
         evicted = freed = 0
@@ -305,6 +373,7 @@ class DiskCache:
                         freed += size
                         total -= size
         finally:
+            self._sweep_file_unlock(lock_fd)
             self._sweep_lock.release()
         return {"evicted": evicted, "bytes_freed": freed}
 

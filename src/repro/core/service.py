@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import threading
 import time
 import warnings
@@ -367,6 +368,7 @@ class LeoService:
 
     def stats_dict(self) -> Dict[str, Any]:
         out: Dict[str, Any] = dict(self.session.stats.as_dict())
+        out["pid"] = os.getpid()    # which pool worker answered /stats
         out["cache_evictions"] = self.session.cache_evictions
         out["diagnosis_hits"] = self.diagnosis_hits
         out["diagnosis_misses"] = self.diagnosis_misses

@@ -485,7 +485,46 @@ def main(argv=None) -> Dict[str, ServerResult]:
     ap.add_argument("--port-file", default=None,
                     help="write the bound --serve port to this file once "
                          "listening (how scripts find an ephemeral port)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="pre-forked worker processes for --serve; 1 "
+                         "(default) serves in-process exactly as before, "
+                         "N>1 binds once and forks N LeoHttpd workers "
+                         "behind the listener (POSIX only)")
+    ap.add_argument("--control-port", type=int, default=0,
+                    help="with --workers N>1: port for the pool's "
+                         "aggregated /metrics /stats /healthz /readyz "
+                         "(0 = ephemeral)")
+    ap.add_argument("--control-port-file", default=None,
+                    help="write the bound control port to this file")
     args = ap.parse_args(argv)
+
+    if args.serve is not None and args.workers > 1:
+        # pre-forked multi-process serving: bind once, fork N workers,
+        # rolling drain on SIGTERM (see repro.serve.pool)
+        from ..serve.pool import LeoWorkerPool, serve_pool_forever
+        pool = LeoWorkerPool(
+            workers=args.workers, host=args.host, port=args.serve,
+            slots=args.slots, max_queue=args.max_queue,
+            retry_after_seconds=args.retry_after,
+            default_deadline_seconds=args.default_deadline,
+            cache_dir=args.cache_dir, control_port=args.control_port)
+        pool.start()
+        if args.port_file:
+            with open(args.port_file, "w") as f:
+                f.write(str(pool.port))
+        if args.control_port_file and pool.control_port is not None:
+            with open(args.control_port_file, "w") as f:
+                f.write(str(pool.control_port))
+        print(f"leo-serve pool listening on http://{args.host}:{pool.port} "
+              f"({args.workers} workers x {args.slots} slots, "
+              f"queue {args.max_queue}, control port {pool.control_port}); "
+              f"SIGTERM drains rolling", flush=True)
+        clean = serve_pool_forever(pool, install_signal_handlers=True)
+        if not clean:
+            print("leo-serve pool drain incomplete", flush=True)
+            raise SystemExit(1)
+        print("leo-serve drained cleanly", flush=True)
+        return {}
 
     if args.serve is not None:
         # the networked front-end: stdlib HTTP around this engine's slots

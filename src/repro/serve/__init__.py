@@ -8,9 +8,16 @@ The stdlib-only network layer over the analysis stack:
     (bounded admission, 429 + Retry-After shedding, per-request
     deadlines, graceful SIGTERM drain);
   * :mod:`repro.serve.client` — retrying ``LeoClient`` with capped
-    jittered backoff and a pipelined ``diagnose_batch``;
+    jittered backoff, a pipelined ``diagnose_batch``, and client-side
+    load balancing across replicas (``endpoints=[...]``:
+    power-of-two-choices over an EWMA of observed queue wait, ejection
+    with half-open probing);
   * :mod:`repro.serve.metrics` — counter/gauge/histogram registry with
-    a Prometheus-text ``/metrics`` renderer.
+    a Prometheus-text ``/metrics`` renderer and cross-worker
+    aggregation (:func:`~repro.serve.metrics.aggregate_dumps`);
+  * :mod:`repro.serve.pool` — pre-forked multi-process serving
+    (``LeoWorkerPool``: bind once, fork N workers, supervise/respawn,
+    rolling SIGTERM drain, aggregated control endpoints).
 
 This module stays import-light: ``repro.serve`` pulls no accelerator
 dependencies (the slot engine under ``repro.launch`` is imported lazily
@@ -24,7 +31,9 @@ from .metrics import (
     Gauge,
     Histogram,
     MetricsRegistry,
+    aggregate_dumps,
 )
+from .pool import LeoWorkerPool, serve_pool_forever
 from .protocol import (
     ERROR_CODES,
     MIN_PROTOCOL_VERSION,
@@ -47,11 +56,14 @@ __all__ = [
     "RetriesExceeded",
     "LeoHttpd",
     "serve_forever",
+    "LeoWorkerPool",
+    "serve_pool_forever",
     "LATENCY_BUCKETS",
     "Counter",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "aggregate_dumps",
     "ERROR_CODES",
     "MIN_PROTOCOL_VERSION",
     "PROTOCOL_VERSION",

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import json
 import signal
+import socket
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, Optional
@@ -53,8 +54,39 @@ from .protocol import (
 
 
 class _Httpd(ThreadingHTTPServer):
+    """ThreadingHTTPServer that can adopt an already-listening socket.
+
+    The pre-fork pool (:mod:`repro.serve.pool`) binds the listener once
+    in the parent and hands the inherited socket to each forked worker;
+    ``listen_socket`` skips bind/listen and serves on the given socket
+    instead.  Without it the behavior is byte-identical to PR 6.
+    """
+
     daemon_threads = True
     app: "LeoHttpd"                     # set by LeoHttpd.__init__
+
+    def __init__(self, server_address: Any, handler_class: Any,
+                 listen_socket: Optional[socket.socket] = None):
+        if listen_socket is None:
+            super().__init__(server_address, handler_class)
+            return
+        super().__init__(server_address, handler_class,
+                         bind_and_activate=False)
+        self.socket.close()             # drop the unused placeholder
+        self.socket = listen_socket
+        # N workers share one listener, so a select() wakeup is only a
+        # hint: a sibling may win the accept() race, and a blocking
+        # accept would then wedge serve_forever past shutdown().  Non-
+        # blocking turns the lost race into a BlockingIOError, which
+        # _handle_request_noblock() already treats as "nothing to do".
+        listen_socket.setblocking(False)
+        # What server_bind()/server_activate() would have set, minus the
+        # reverse-DNS lookup (socket.getfqdn) — a forked worker must not
+        # stall on a resolver during spawn.
+        self.server_address = listen_socket.getsockname()
+        host, port = self.server_address[:2]
+        self.server_name = host
+        self.server_port = port
 
 
 class LeoHttpd:
@@ -73,7 +105,8 @@ class LeoHttpd:
                  retry_after_seconds: float = 0.25,
                  default_deadline_seconds: Optional[float] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 drain_timeout_seconds: Optional[float] = 30.0):
+                 drain_timeout_seconds: Optional[float] = 30.0,
+                 listen_socket: Optional[Any] = None):
         # imported here, not at module top: repro.launch pulls jax in via
         # its package __init__, and repro.serve stays stdlib-light until
         # a server is actually constructed
@@ -119,7 +152,8 @@ class LeoHttpd:
         m.gauge("leo_ready", "1 while admitting, 0 while draining"
                 ).set_function(lambda: 0.0 if self.draining else 1.0)
 
-        self.httpd = _Httpd((host, port), _Handler)
+        self.httpd = _Httpd((host, port), _Handler,
+                            listen_socket=listen_socket)
         self.httpd.app = self
         self.host = self.httpd.server_address[0]
         self.port = self.httpd.server_address[1]

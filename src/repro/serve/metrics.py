@@ -21,6 +21,15 @@ format (version 0.0.4), which is what the ``/metrics`` endpoint serves.
 Everything is thread-safe: one lock per registry guards creation, one
 lock per metric guards its label children.  See ``docs/serving.md`` for
 the full metric catalog the serving stack emits.
+
+For multi-process serving every instrument also supports a structured
+:meth:`~_Metric.dump` (JSON-serializable snapshot), and
+:func:`aggregate_dumps` merges the per-worker registry dumps into one
+Prometheus page: counters and histogram buckets/sums/counts are SUMMED
+across workers, gauges keep one sample per worker labeled
+``worker="k"`` (summing a queue depth across workers is meaningful, but
+summing e.g. ``leo_ready`` flags is not — the operator gets both views:
+the per-worker gauge samples and the summed counters).
 """
 from __future__ import annotations
 
@@ -93,6 +102,9 @@ class _Metric:
     def render(self) -> List[str]:  # pragma: no cover - overridden
         raise NotImplementedError
 
+    def dump(self) -> Dict[str, Any]:  # pragma: no cover - overridden
+        raise NotImplementedError
+
 
 class Counter(_Metric):
     """Monotonic total.  ``inc()`` on the bare metric (no labels) or with
@@ -127,6 +139,12 @@ class Counter(_Metric):
                        f"{_labels_suffix(self.labelnames, key)} "
                        f"{_format_value(value)}")
         return out
+
+    def dump(self) -> Dict[str, Any]:
+        with self._lock:
+            values = [[list(k), v] for k, v in sorted(self._values.items())]
+        return {"kind": self.kind, "help": self.help,
+                "labelnames": list(self.labelnames), "values": values}
 
 
 class Gauge(_Metric):
@@ -185,6 +203,21 @@ class Gauge(_Metric):
                        f"{_labels_suffix(self.labelnames, key)} "
                        f"{_format_value(value)}")
         return out
+
+    def dump(self) -> Dict[str, Any]:
+        """Snapshot with callback gauges sampled at dump time — the
+        control-pipe heartbeat ships live queue depths, not stale sets."""
+        with self._lock:
+            values = dict(self._values)
+            functions = dict(self._functions)
+        for key, fn in functions.items():
+            try:
+                values[key] = float(fn())
+            except Exception:   # noqa: BLE001 - mirror render()
+                pass
+        return {"kind": self.kind, "help": self.help,
+                "labelnames": list(self.labelnames),
+                "values": [[list(k), v] for k, v in sorted(values.items())]}
 
 
 class Histogram(_Metric):
@@ -256,6 +289,14 @@ class Histogram(_Metric):
                        f"{totals[key]}")
         return out
 
+    def dump(self) -> Dict[str, Any]:
+        with self._lock:
+            rows = [[list(k), list(self._counts[k]), self._sums[k],
+                     self._totals[k]] for k in sorted(self._counts)]
+        return {"kind": self.kind, "help": self.help,
+                "labelnames": list(self.labelnames),
+                "bounds": list(self.bounds), "rows": rows}
+
 
 class MetricsRegistry:
     """Get-or-create factory plus the ``/metrics`` renderer.
@@ -312,6 +353,113 @@ class MetricsRegistry:
             lines.extend(metric.render())
         return "\n".join(lines) + "\n"
 
+    def dump(self) -> Dict[str, Dict[str, Any]]:
+        """JSON-serializable snapshot of every registered metric — the
+        unit a pool worker ships over its control pipe each heartbeat."""
+        with self._lock:
+            metrics = [self._metrics[n] for n in sorted(self._metrics)]
+        return {m.name: m.dump() for m in metrics}
+
     def __repr__(self) -> str:
         with self._lock:
             return f"MetricsRegistry({sorted(self._metrics)})"
+
+
+def _merge_counter(name: str, dumps: List[Dict[str, Any]]) -> List[str]:
+    first = dumps[0]
+    labelnames = tuple(first["labelnames"])
+    merged: Dict[_LabelKey, float] = {}
+    for d in dumps:
+        for key, value in d["values"]:
+            k = tuple(key)
+            merged[k] = merged.get(k, 0.0) + float(value)
+    out = [f"# HELP {name} {_escape_help(first['help'])}",
+           f"# TYPE {name} counter"]
+    items = sorted(merged.items()) or ([((), 0.0)] if not labelnames else [])
+    for key, value in items:
+        out.append(f"{name}{_labels_suffix(labelnames, key)} "
+                   f"{_format_value(value)}")
+    return out
+
+
+def _merge_gauge(name: str, worker_dumps: List[Tuple[str, Dict[str, Any]]]
+                 ) -> List[str]:
+    first = worker_dumps[0][1]
+    labelnames = tuple(first["labelnames"])
+    out = [f"# HELP {name} {_escape_help(first['help'])}",
+           f"# TYPE {name} gauge"]
+    for worker, d in worker_dumps:
+        for key, value in d["values"]:
+            out.append(
+                f"{name}"
+                f"{_labels_suffix(labelnames, tuple(key), ('worker', worker))}"
+                f" {_format_value(float(value))}")
+    return out
+
+
+def _merge_histogram(name: str, dumps: List[Dict[str, Any]]) -> List[str]:
+    first = dumps[0]
+    labelnames = tuple(first["labelnames"])
+    bounds = tuple(float(b) for b in first["bounds"])
+    counts: Dict[_LabelKey, List[int]] = {}
+    sums: Dict[_LabelKey, float] = {}
+    totals: Dict[_LabelKey, int] = {}
+    for d in dumps:
+        if tuple(float(b) for b in d["bounds"]) != bounds:
+            continue    # mismatched buckets (mid-upgrade worker): skip
+        for key, row_counts, row_sum, row_total in d["rows"]:
+            k = tuple(key)
+            if k not in counts:
+                counts[k] = [0] * len(bounds)
+            for i, c in enumerate(row_counts):
+                counts[k][i] += int(c)
+            sums[k] = sums.get(k, 0.0) + float(row_sum)
+            totals[k] = totals.get(k, 0) + int(row_total)
+    out = [f"# HELP {name} {_escape_help(first['help'])}",
+           f"# TYPE {name} histogram"]
+    for key in sorted(counts):
+        for bound, cum in zip(bounds, counts[key]):
+            out.append(
+                f"{name}_bucket"
+                f"{_labels_suffix(labelnames, key, ('le', _format_value(bound)))}"
+                f" {cum}")
+        out.append(f"{name}_bucket"
+                   f"{_labels_suffix(labelnames, key, ('le', '+Inf'))}"
+                   f" {totals[key]}")
+        out.append(f"{name}_sum{_labels_suffix(labelnames, key)} "
+                   f"{_format_value(sums[key])}")
+        out.append(f"{name}_count{_labels_suffix(labelnames, key)} "
+                   f"{totals[key]}")
+    return out
+
+
+def aggregate_dumps(dumps: Dict[str, Dict[str, Dict[str, Any]]]) -> str:
+    """Merge per-worker :meth:`MetricsRegistry.dump` snapshots into one
+    Prometheus text page.
+
+    ``dumps`` maps a worker id (e.g. ``"0"``, ``"1"``) to that worker's
+    registry dump.  Counters and histograms are summed across workers —
+    the fleet-wide ``leo_requests_total`` equals the sum of per-worker
+    totals by construction.  Gauges are NOT summed: each worker's sample
+    is kept and tagged with an extra ``worker="k"`` label, because most
+    gauges (readiness flags, slot counts) are meaningless as sums.
+    Workers missing a metric simply contribute nothing to it.
+    """
+    names: Dict[str, str] = {}
+    for d in dumps.values():
+        for name, md in d.items():
+            names.setdefault(name, md["kind"])
+    lines: List[str] = []
+    for name in sorted(names):
+        kind = names[name]
+        present = [(w, dumps[w][name]) for w in sorted(dumps)
+                   if name in dumps[w] and dumps[w][name]["kind"] == kind]
+        if not present:
+            continue
+        if kind == "counter":
+            lines.extend(_merge_counter(name, [d for _, d in present]))
+        elif kind == "gauge":
+            lines.extend(_merge_gauge(name, present))
+        elif kind == "histogram":
+            lines.extend(_merge_histogram(name, [d for _, d in present]))
+    return "\n".join(lines) + "\n"

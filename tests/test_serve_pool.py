@@ -1,0 +1,436 @@
+"""Multi-process serving tests: LeoWorkerPool, metrics aggregation, and
+client-side load balancing.
+
+Pins the PR's acceptance contract:
+
+  * a pre-forked pool serves real traffic on one shared port, and the
+    aggregated ``/metrics`` counter totals equal the sum of the
+    per-worker registry dumps;
+  * a SIGKILLed worker is respawned by the supervisor while the client's
+    retry path completes every request with zero errors;
+  * SIGTERM drains rolling — workers exit 0 one at a time, in order;
+  * a request parsed by one worker is a zero-parse disk hit for another
+    worker sharing the ``cache_dir`` (the PR 2 stats assertion extended
+    to the network path);
+  * ``LeoClient(endpoints=[...])`` balances by power-of-two-choices over
+    the observed ``queue_seconds`` EWMA, ejects dead endpoints with
+    half-open probing, keeps ``diagnose_batch`` order-preserving across
+    replicas, and leaks no sockets after a threaded batch.
+"""
+import http.client
+import json
+import os
+import random
+import signal
+import socket
+import time
+
+import pytest
+
+from repro.core.service import AnalyzeRequest, LeoService
+from repro.serve import (
+    LeoClient,
+    LeoHttpd,
+    MetricsRegistry,
+    aggregate_dumps,
+    encode_request,
+)
+from repro.serve.pool import LeoWorkerPool, respawn_delay
+
+fork_only = pytest.mark.skipif(not hasattr(os, "fork"),
+                               reason="LeoWorkerPool needs os.fork")
+
+
+def _await(predicate, timeout=15.0, poll=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(poll)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# metrics aggregation (pure, no fork)
+# ---------------------------------------------------------------------------
+
+class TestAggregateDumps:
+    def _registries(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        for reg, n in ((a, 3), (b, 5)):
+            c = reg.counter("leo_requests_total", "requests",
+                            labelnames=("endpoint", "code"))
+            c.inc(n, endpoint="analyze", code="200")
+            c.inc(1, endpoint="healthz", code="200")
+            h = reg.histogram("leo_queue_seconds", "queue wait",
+                              buckets=(0.1, 1.0))
+            for v in [0.05] * n + [0.5]:
+                h.observe(v)
+            reg.gauge("leo_ready", "ready flag").set(1.0)
+        return a, b
+
+    def test_counters_sum_across_workers(self):
+        a, b = self._registries()
+        text = aggregate_dumps({"0": a.dump(), "1": b.dump()})
+        assert 'leo_requests_total{endpoint="analyze",code="200"} 8' in text
+        assert 'leo_requests_total{endpoint="healthz",code="200"} 2' in text
+
+    def test_histograms_sum_buckets_sums_counts(self):
+        a, b = self._registries()
+        text = aggregate_dumps({"0": a.dump(), "1": b.dump()})
+        # 3+5 observations at 0.05 (le=0.1) plus one 0.5 each (le=1.0)
+        assert 'leo_queue_seconds_bucket{le="0.1"} 8' in text
+        assert 'leo_queue_seconds_bucket{le="1"} 10' in text
+        assert 'leo_queue_seconds_bucket{le="+Inf"} 10' in text
+        assert "leo_queue_seconds_count 10" in text
+        total = 3 * 0.05 + 0.5 + 5 * 0.05 + 0.5
+        assert f"leo_queue_seconds_sum {total}" in text
+
+    def test_gauges_labeled_per_worker_not_summed(self):
+        a, b = self._registries()
+        text = aggregate_dumps({"0": a.dump(), "1": b.dump()})
+        assert 'leo_ready{worker="0"} 1' in text
+        assert 'leo_ready{worker="1"} 1' in text
+        assert "\nleo_ready 2" not in text
+
+    def test_worker_missing_a_metric_contributes_nothing(self):
+        a, b = self._registries()
+        b.counter("leo_only_b_total", "only b").inc(4)
+        text = aggregate_dumps({"0": a.dump(), "1": b.dump()})
+        assert "leo_only_b_total 4" in text
+
+
+class TestRespawnDelay:
+    def test_free_restarts_are_immediate(self):
+        assert respawn_delay([], 100.0) == 0.0
+        assert respawn_delay([99.0, 99.5], 100.0) == 0.0
+
+    def test_storm_backs_off_exponentially_to_cap(self):
+        history = [100.0, 100.1, 100.2]
+        assert respawn_delay(history, 100.3) == 0.5
+        history.append(100.3)
+        assert respawn_delay(history, 100.4) == 1.0
+        many = [100.0 + 0.01 * i for i in range(12)]
+        assert respawn_delay(many, 100.2) == 5.0          # capped
+
+    def test_old_crashes_age_out_of_the_window(self):
+        history = [10.0, 11.0, 12.0, 13.0]
+        assert respawn_delay(history, 50.0) == 0.0        # all outside 30s
+
+
+# ---------------------------------------------------------------------------
+# client-side load balancing (in-process servers, no fork)
+# ---------------------------------------------------------------------------
+
+class TestClientLoadBalancing:
+    def test_power_of_two_choices_prefers_lower_ewma(self):
+        client = LeoClient(endpoints=["127.0.0.1:1", "127.0.0.1:2"],
+                           rng=random.Random(7))
+        client.endpoints[0].ewma_queue_seconds = 0.5
+        client.endpoints[1].ewma_queue_seconds = 0.01
+        picks = {client._pick_endpoint() for _ in range(32)}
+        assert picks == {1}     # both sampled every time; lower EWMA wins
+
+    def test_untried_endpoint_looks_attractive(self):
+        client = LeoClient(endpoints=["127.0.0.1:1", "127.0.0.1:2"],
+                           rng=random.Random(7))
+        client.endpoints[0].ewma_queue_seconds = 0.2    # observed, loaded
+        picks = {client._pick_endpoint() for _ in range(32)}
+        assert picks == {1}     # None EWMA sorts below any observation
+
+    def test_ejection_and_half_open_probe(self):
+        client = LeoClient(endpoints=["127.0.0.1:1", "127.0.0.1:2"],
+                           rng=random.Random(7), eject_seconds=0.5)
+        client._note_conn_failure(0, now=100.0)
+        snap = client.lb_snapshot()
+        assert snap[0]["failures"] == 1
+        # while ejected only the healthy endpoint is picked
+        assert {client._pick_endpoint(now=100.2) for _ in range(8)} == {1}
+        # cool-off expired: exactly one half-open probe is admitted
+        assert client._pick_endpoint(now=100.6) == 0
+        assert client.endpoints[0].probing
+        assert {client._pick_endpoint(now=100.6) for _ in range(8)} == {1}
+        # a failed probe re-ejects with a doubled cool-off
+        client._note_conn_failure(0, now=100.6)
+        assert client.endpoints[0].ejected_until == pytest.approx(101.6)
+        # a successful probe fully reinstates
+        client._note_success(0)
+        assert not client.endpoints[0].probing
+        assert client.endpoints[0].failures == 0
+
+    def test_all_endpoints_dead_still_picks_one(self):
+        client = LeoClient(endpoints=["127.0.0.1:1", "127.0.0.1:2"])
+        client._note_conn_failure(0, now=100.0)
+        client._note_conn_failure(1, now=101.0)
+        assert client._pick_endpoint(now=100.1) == 0    # least-recently ejected
+
+    def test_balances_across_two_live_servers(self, async_hlo_text,
+                                               copystorm_hlo_text):
+        with LeoHttpd(port=0, slots=2) as app1, \
+                LeoHttpd(port=0, slots=2) as app2:
+            eps = [f"127.0.0.1:{app1.port}", f"127.0.0.1:{app2.port}"]
+            with LeoClient(endpoints=eps, max_retries=3) as client:
+                reqs = [AnalyzeRequest(
+                    hlo_text=(async_hlo_text if i % 2 == 0
+                              else copystorm_hlo_text),
+                    backend="tpu_v5e") for i in range(8)]
+                out = client.diagnose_batch(reqs, max_connections=4)
+                assert len(out) == 8
+                # order-preserving across replicas: every even slot got
+                # the async diagnosis, every odd slot the copy-storm one
+                assert len({d.to_json() for d in out[0::2]}) == 1
+                assert len({d.to_json() for d in out[1::2]}) == 1
+                assert out[0].to_json() != out[1].to_json()
+                served = [app.m_requests.value(endpoint="analyze",
+                                               code="200")
+                          for app in (app1, app2)]
+                assert sum(served) == 8
+                assert all(s > 0 for s in served), \
+                    f"traffic never spread: {served}"
+
+    def test_dead_endpoint_routes_to_survivor(self, async_hlo_text):
+        # grab a port that refuses connections (bound, never listening
+        # beyond close)
+        dead = socket.socket()
+        dead.bind(("127.0.0.1", 0))
+        dead_port = dead.getsockname()[1]
+        dead.close()
+        with LeoHttpd(port=0, slots=2) as app:
+            eps = [f"127.0.0.1:{dead_port}", f"127.0.0.1:{app.port}"]
+            with LeoClient(endpoints=eps, max_retries=5,
+                           backoff_base_seconds=0.01) as client:
+                for _ in range(4):
+                    d = client.diagnose(async_hlo_text, backend="tpu_v5e")
+                    assert d.backend == "tpu_v5e"
+                snap = client.lb_snapshot()
+                by_port = {s["port"]: s for s in snap}
+                assert by_port[dead_port]["failures"] >= 1
+                assert by_port[app.port]["failures"] == 0
+
+    def test_close_reaches_other_threads_connections(self, async_hlo_text):
+        """Satellite: no socket leaks after a threaded diagnose_batch —
+        pool-thread keep-alive conns are pruned when the batch ends, and
+        close() closes whatever remains (any thread's)."""
+        with LeoHttpd(port=0, slots=4) as app:
+            client = LeoClient(port=app.port)
+            reqs = [AnalyzeRequest(hlo_text=async_hlo_text,
+                                   backend="tpu_v5e")] * 6
+            for _ in range(3):
+                out = client.diagnose_batch(reqs, max_connections=6)
+                assert len(out) == 6
+            assert _await(lambda: client.open_connection_count() == 0), \
+                (f"{client.open_connection_count()} sockets leaked by "
+                 f"batch pool threads")
+            # the calling thread's own conn is registered and closed too
+            client.diagnose(async_hlo_text, backend="tpu_v5e")
+            assert client.open_connection_count() == 1
+            client.close()
+            assert client.open_connection_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# the pre-forked pool (fork required)
+# ---------------------------------------------------------------------------
+
+def _encode(hlo_text, backend="tpu_v5e"):
+    return encode_request(AnalyzeRequest(hlo_text=hlo_text,
+                                         backend=backend))
+
+
+@fork_only
+class TestPoolServing:
+    def test_round_trip_and_batch_through_shared_port(self, async_hlo_text,
+                                                      copystorm_hlo_text):
+        with LeoWorkerPool(workers=2, port=0, slots=2,
+                           control_port=None) as pool:
+            assert pool.wait_ready(30.0)
+            with LeoClient(port=pool.port, max_retries=3) as client:
+                d = client.diagnose(async_hlo_text, backend="tpu_v5e")
+                assert d.backend == "tpu_v5e"
+                reqs = [AnalyzeRequest(
+                    hlo_text=(async_hlo_text if i % 2 == 0
+                              else copystorm_hlo_text),
+                    backend="tpu_v5e") for i in range(6)]
+                out = client.diagnose_batch(reqs, max_connections=3)
+                assert len(out) == 6
+                assert len({d.to_json() for d in out[0::2]}) == 1
+                assert out[0].to_json() != out[1].to_json()
+
+    @pytest.mark.skipif(not hasattr(socket, "SO_REUSEPORT"),
+                        reason="needs SO_REUSEPORT")
+    def test_reuseport_fallback_serves(self, async_hlo_text):
+        with LeoWorkerPool(workers=2, port=0, slots=2, mode="reuseport",
+                           control_port=None) as pool:
+            assert pool.wait_ready(30.0)
+            with LeoClient(port=pool.port, max_retries=3) as client:
+                d = client.diagnose(async_hlo_text, backend="amd_mi300a")
+                assert d.backend == "amd_mi300a"
+
+    def test_aggregated_counters_equal_sum_of_worker_dumps(
+            self, async_hlo_text):
+        """Acceptance: aggregated /metrics counter totals == the sum of
+        the per-worker registries."""
+        n_requests = 6
+        with LeoWorkerPool(workers=2, port=0, slots=2) as pool:
+            assert pool.wait_ready(30.0)
+            with LeoClient(port=pool.port, max_retries=3) as client:
+                reqs = [AnalyzeRequest(hlo_text=async_hlo_text,
+                                       backend="tpu_v5e")] * n_requests
+                out = client.diagnose_batch(reqs, max_connections=3)
+                assert len(out) == n_requests
+
+            def served_total():
+                total = 0
+                for snap in pool.worker_snapshots().values():
+                    dump = snap["metrics"].get("leo_requests_total", {})
+                    for key, value in dump.get("values", []):
+                        if key == ["analyze", "200"]:
+                            total += value
+                return total
+
+            # wait for every worker's post-traffic heartbeat to land
+            assert _await(lambda: served_total() == n_requests), \
+                f"worker dumps total {served_total()} != {n_requests}"
+
+            text = pool.aggregate_metrics_text()
+            assert (f'leo_requests_total{{endpoint="analyze",code="200"}} '
+                    f"{n_requests}") in text
+            # gauges arrive per worker, never summed
+            assert 'leo_ready{worker="0"} 1' in text
+            assert 'leo_ready{worker="1"} 1' in text
+
+            # the pool's control HTTP endpoints serve the same page
+            conn = http.client.HTTPConnection("127.0.0.1",
+                                              pool.control_port,
+                                              timeout=10.0)
+            try:
+                conn.request("GET", "/metrics")
+                body = conn.getresponse().read().decode()
+                assert (f'leo_requests_total{{endpoint="analyze",'
+                        f'code="200"}} {n_requests}') in body
+                conn.request("GET", "/stats")
+                stats = json.loads(conn.getresponse().read())
+                assert len(stats["workers"]) == 2
+                conn.request("GET", "/healthz")
+                resp = conn.getresponse()
+                resp.read()             # drain: keep-alive stays usable
+                assert resp.status == 200
+                conn.request("GET", "/readyz")
+                resp = conn.getresponse()
+                resp.read()
+                assert resp.status == 200
+            finally:
+                conn.close()
+
+    def test_sigkilled_worker_respawns_and_requests_complete(
+            self, async_hlo_text):
+        """Acceptance: worker-crash respawn, with the client's retry path
+        completing every request with zero errors."""
+        with LeoWorkerPool(workers=2, port=0, slots=2,
+                           control_port=None) as pool:
+            assert pool.wait_ready(30.0)
+            pids0 = dict(pool.worker_pids)
+            victim_idx, victim_pid = sorted(pids0.items())[0]
+            os.kill(victim_pid, signal.SIGKILL)
+            with LeoClient(port=pool.port, max_retries=8,
+                           backoff_base_seconds=0.02) as client:
+                for i in range(6):
+                    d = client.diagnose(async_hlo_text, backend="tpu_v5e")
+                    assert d.backend == "tpu_v5e"
+            assert _await(
+                lambda: pool.worker_pids.get(victim_idx)
+                not in (None, victim_pid), timeout=30.0), \
+                "supervisor never respawned the SIGKILLed worker"
+            assert pool.respawns_total >= 1
+            assert pool.wait_ready(30.0)    # replacement reports ready
+
+    def test_rolling_sigterm_drain_exits_zero_in_order(self,
+                                                       async_hlo_text):
+        """Acceptance: rolling SIGTERM drain — one worker at a time, all
+        exit 0."""
+        pool = LeoWorkerPool(workers=2, port=0, slots=2,
+                             control_port=None).start()
+        try:
+            assert pool.wait_ready(30.0)
+            with LeoClient(port=pool.port, max_retries=3) as client:
+                client.diagnose(async_hlo_text, backend="tpu_v5e")
+        finally:
+            assert pool.drain() is True
+        events = pool.drain_events
+        sigterms = [e for e in events if e[0] == "sigterm"]
+        exits = [e for e in events if e[0] == "exit"]
+        assert [idx for _, idx, _ in sigterms] == [0, 1]
+        assert [idx for _, idx, _ in exits] == [0, 1]
+        # rolling: worker 1 is not told to stop until worker 0 exited
+        assert sigterms[1][2] >= exits[0][2]
+        for rec in pool._records.values():
+            assert rec.exit_code == 0
+
+    def test_cross_process_warm_tier_zero_parses(self, tmp_path,
+                                                 async_hlo_text):
+        """Satellite: a request parsed (cold) by one worker process is a
+        zero-parse disk hit for a different worker process sharing the
+        cache_dir — the PR 2 stats assertion extended to the network
+        path, across real forked server processes."""
+        body = _encode(async_hlo_text)
+        with LeoWorkerPool(workers=2, port=0, slots=2,
+                           cache_dir=str(tmp_path / "cache"),
+                           control_port=None) as pool:
+            assert pool.wait_ready(30.0)
+
+            def stats_on(conn):
+                conn.request("GET", "/stats")
+                return json.loads(conn.getresponse().read())
+
+            def analyze_on(conn):
+                conn.request("POST", "/v1/analyze", body=body,
+                             headers={"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                payload = resp.read()
+                assert resp.status == 200, payload[:200]
+
+            # cold request: whichever worker this keep-alive connection
+            # landed on parses and publishes to the shared disk tier
+            first = http.client.HTTPConnection("127.0.0.1", pool.port,
+                                               timeout=30.0)
+            analyze_on(first)
+            first_stats = stats_on(first)
+            first_pid = first_stats["pid"]
+            assert first_stats["parse_calls"] >= 1
+            first.close()
+
+            # find a keep-alive connection accepted by the *other*
+            # worker (connection affinity: one conn stays with the
+            # worker that accepted it)
+            other = None
+            for _ in range(200):
+                conn = http.client.HTTPConnection("127.0.0.1", pool.port,
+                                                  timeout=30.0)
+                if stats_on(conn)["pid"] != first_pid:
+                    other = conn
+                    break
+                conn.close()
+                time.sleep(0.01)
+            assert other is not None, \
+                "kernel never balanced a connection to the second worker"
+            try:
+                analyze_on(other)
+                stats = stats_on(other)
+                assert stats["pid"] != first_pid
+                # zero HLO parses: the diagnosis came off the shared
+                # disk tier, never touching the parser
+                assert stats["parse_calls"] == 0
+                assert stats["disk"]["diagnosis_hits"] >= 1
+            finally:
+                other.close()
+
+
+@fork_only
+class TestPoolValidation:
+    def test_rejects_zero_workers(self):
+        with pytest.raises(ValueError):
+            LeoWorkerPool(workers=0)
+
+    def test_rejects_unknown_mode(self):
+        with pytest.raises(ValueError):
+            LeoWorkerPool(workers=2, mode="threads")

@@ -372,6 +372,101 @@ class TestDiskEviction:
 
 
 # --------------------------------------------------------------------------
+# Cross-process safety: the disk tier as a multi-worker warm cache.
+# --------------------------------------------------------------------------
+
+class TestCrossProcessDiskCache:
+    def test_sweep_lockfile_admits_one_compactor(self, tmp_path):
+        """Only one process sweeps at a time: with the ``.sweep.lock``
+        flock held elsewhere, a non-blocking sweep skips."""
+        fcntl = pytest.importorskip("fcntl")
+        import os
+        from repro.core import DiskCache
+        cache = DiskCache(str(tmp_path), max_bytes=1)
+        # stand in for another worker process: flock conflicts between
+        # distinct open file descriptions even within one process
+        fd = os.open(cache._sweep_lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        try:
+            assert cache.sweep(blocking=False).get("skipped") == 1
+            assert cache.stats.sweeps == 0
+        finally:
+            os.close(fd)
+        assert "skipped" not in cache.sweep(blocking=False)
+        assert cache.stats.sweeps == 1
+
+    def test_scan_skips_artifacts_unlinked_mid_sweep(self, tmp_path,
+                                                     monkeypatch):
+        """FileNotFoundError between listing and stat (a concurrently-
+        exiting process's final sweep) is skip-and-continue."""
+        import hashlib
+        import os
+        from repro.core import DiskCache
+        cache = DiskCache(str(tmp_path), max_bytes=1)
+        keys = [hashlib.sha256(f"x{i}".encode()).hexdigest()
+                for i in range(3)]
+        for key in keys:
+            cache.store_module(key, {"payload": "y" * 1024})
+        victim = cache._path("modules", keys[1], ".pkl.gz")
+        real_stat = os.stat
+
+        def racing_stat(path, *args, **kwargs):
+            if path == victim:
+                os.unlink(victim)       # the "other process" wins the race
+                # the original file is gone; stat must raise exactly the
+                # error a lost race produces
+            return real_stat(path, *args, **kwargs)
+
+        monkeypatch.setattr(os, "stat", racing_stat)
+        stats = cache.sweep()           # must not raise
+        monkeypatch.undo()
+        assert stats["evicted"] == 2    # the victim was already gone
+        assert cache.total_bytes() == 0
+
+    def test_two_processes_hammer_one_cache_dir(self, tmp_path):
+        """Satellite: a writer process stores/loads/sweeps in a loop and
+        exits while this process sweeps and clears the same root — no
+        crash on either side (atomic publish + lockfile + skip-and-
+        continue scanning)."""
+        import os
+        import subprocess
+        import sys
+        import time
+        import repro.core
+        from repro.core import DiskCache
+        src_dir = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(repro.core.__file__))))
+        root = str(tmp_path / "shared")
+        child_src = (
+            "import hashlib, sys\n"
+            f"sys.path.insert(0, {src_dir!r})\n"
+            "from repro.core import DiskCache\n"
+            f"cache = DiskCache({root!r}, max_bytes=16384, "
+            "sweep_interval=4)\n"
+            "for i in range(150):\n"
+            "    key = hashlib.sha256(str(i).encode()).hexdigest()\n"
+            "    cache.store_module(key, {'payload': 'z' * 2048, 'i': i})\n"
+            "    cache.load_module(key)\n"
+            "cache.flush()\n"
+        )
+        proc = subprocess.Popen([sys.executable, "-c", child_src],
+                                stderr=subprocess.PIPE)
+        sweeper = DiskCache(root, max_bytes=8192, sweep_interval=2)
+        rounds = 0
+        while proc.poll() is None:
+            sweeper.sweep(blocking=False)
+            sweeper.sweep(blocking=True)
+            if rounds % 7 == 3:
+                sweeper.clear()         # rip whole kind dirs out from under
+            rounds += 1
+            time.sleep(0.002)
+        _, stderr = proc.communicate(timeout=30)
+        assert proc.returncode == 0, stderr.decode()
+        assert rounds >= 1
+        sweeper.flush()                 # and the survivor still sweeps
+
+
+# --------------------------------------------------------------------------
 # Concurrency: fan-out with single-flight dedup.
 # --------------------------------------------------------------------------
 
